@@ -1,0 +1,60 @@
+"""Roofline table: aggregate the dry-run JSON records (launch/dryrun.py)
+into the per-(arch x shape x mesh) table for EXPERIMENTS.md §Roofline.
+
+CSV: name,us_per_call,derived  (us_per_call = dominant term in us)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def load(tag: str | None = None, mesh: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if tag and r.get("tag") != tag:
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def table(recs):
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok":
+            rows.append((r["arch"], r["shape"], r["mesh"], r["status"],
+                         None))
+            continue
+        rows.append((r["arch"], r["shape"], r["mesh"], "ok",
+                     r["roofline"]))
+    return rows
+
+
+def main():
+    recs = load(tag="baseline", mesh="pod")
+    if not recs:
+        print("roofline_no_records,0,run launch/dryrun.py first")
+        return
+    for arch, shape, mesh, status, rf in table(recs):
+        if rf is None:
+            print(f"roofline_{arch}_{shape},0,{status}")
+            continue
+        dom_s = rf[f"{rf['dominant']}_s"]
+        derived = (f"dominant={rf['dominant']};"
+                   f"compute_s={rf['compute_s']:.3e};"
+                   f"memory_s={rf['memory_s']:.3e};"
+                   f"collective_s={rf['collective_s']:.3e};"
+                   f"useful={rf['useful_flops_ratio']:.3f}")
+        print(f"roofline_{arch}_{shape},{dom_s * 1e6:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

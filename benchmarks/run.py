@@ -1,0 +1,60 @@
+"""Benchmark driver — one section per paper table / report table.
+
+  table1_*   paper Table 1 analogue (6 dataflow benchmarks: resources +
+             engine cycles + compiled throughput)
+  kernel_*   Pallas kernel micro-benchmarks vs jnp references
+  train_*    end-to-end reduced-config train-step timings (per family)
+  roofline_* aggregated dry-run roofline terms (if records exist)
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def _train_steps():
+    from repro.configs.base import get_arch
+    from repro.data.pipeline import SyntheticLM
+    from repro.optim import adamw
+    from repro.train.loop import init_state, make_train_step
+
+    for name in ("internlm2-1.8b", "kimi-k2-1t-a32b", "rwkv6-1.6b",
+                 "zamba2-7b", "whisper-medium"):
+        cfg = get_arch(name).reduced()
+        src = SyntheticLM(vocab=cfg.vocab, seq_len=64, global_batch=4,
+                          seed=0, frontend=cfg.frontend,
+                          n_patches=cfg.n_patches,
+                          frontend_dim=cfg.frontend_dim,
+                          enc_seq=cfg.enc_seq)
+        step = make_train_step(cfg, adamw.OptConfig(), donate=False)
+        state = init_state(cfg, jax.random.key(0))
+        b = src.batch_for_step(0)
+        state, m = step(state, b)          # compile
+        ts = []
+        for i in range(1, 4):
+            b = src.batch_for_step(i)
+            t0 = time.perf_counter()
+            state, m = step(state, b)
+            float(m["loss"])
+            ts.append(time.perf_counter() - t0)
+        us = float(np.median(ts)) * 1e6
+        toks = 4 * 64
+        print(f"train_step_{name},{us:.0f},"
+              f"tok_per_s={toks / us * 1e6:.0f};reduced_cfg;loss="
+              f"{float(m['loss']):.3f}")
+
+
+def main() -> None:
+    from benchmarks import table1_dataflow, kernels_bench, roofline
+    table1_dataflow.main()
+    kernels_bench.main()
+    _train_steps()
+    roofline.main()
+
+
+if __name__ == "__main__":
+    main()

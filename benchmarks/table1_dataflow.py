@@ -1,0 +1,98 @@
+"""Paper Table 1 analogue: per-benchmark fabric resources + speed.
+
+Paper columns FF / LUT / Slices / Fmax map to (DESIGN.md §2):
+  FF     -> arc register bits (16-bit data + 1-bit status per arc)
+  LUT    -> summed operator datapath complexity weights
+  Slices -> node count
+  Fmax   -> engine throughput (cycles/token when streaming; the
+            architecture-determined rate, like the paper's 613 MHz) and
+            the compiled backend's wall-clock tokens/s on this host.
+
+CSV: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import library
+from repro.core.compile import compile_dag_stream, compile_cyclic
+from repro.core.engine import DataflowEngine
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)   # warmup/compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6   # us
+
+
+def rows():
+    rng = np.random.default_rng(0)
+    out = []
+    stream_k = 64
+    for name, mk in library.BENCHES.items():
+        bench = mk()
+        g = bench.graph
+        r = g.resources()
+        eng = DataflowEngine(g)
+        if name == "fibonacci":
+            feeds1 = bench.make_feeds(20)
+            feeds_k = feeds1
+            run = compile_cyclic(g)
+            compiled_call = lambda: run(feeds1)
+            n_stream = 1
+        else:
+            n = len(g.input_arcs())
+            if name == "dot_prod":
+                a = rng.integers(0, 9, (stream_k, n // 2))
+                b = rng.integers(0, 9, (stream_k, n // 2))
+                feeds1 = bench.make_feeds(a[:1], b[:1])
+                feeds_k = bench.make_feeds(a, b)
+            elif name == "pop_count":
+                x = rng.integers(0, 2 ** 16, (stream_k,))
+                feeds1 = bench.make_feeds(x[:1])
+                feeds_k = bench.make_feeds(x)
+            else:
+                v = rng.integers(0, 99, (stream_k, n))
+                feeds1 = bench.make_feeds(v[:1])
+                feeds_k = bench.make_feeds(v)
+            fn = compile_dag_stream(g)
+            feeds_np = {k: np.asarray(v, np.int32)
+                        for k, v in feeds_k.items()}
+            compiled_call = lambda: fn(feeds_np)
+            n_stream = stream_k
+
+        lat = eng.run(feeds1).cycles
+        thr = eng.run(feeds_k).cycles if n_stream > 1 else lat
+        cyc_per_tok = (thr - lat) / max(n_stream - 1, 1) if n_stream > 1 \
+            else lat
+        us = _time(lambda: np.asarray(
+            list(compiled_call().outputs.values() if name == "fibonacci"
+                 else compiled_call().values())[0]))
+        out.append({
+            "name": name, "nodes": r["nodes"], "arcs": r["arcs"],
+            "ff_bits": r["ff_bits"], "lut_weight": r["lut_weight"],
+            "latency_cycles": lat,
+            "cycles_per_token": round(cyc_per_tok, 2),
+            "compiled_us_per_stream": round(us, 1),
+            "compiled_us_per_token": round(us / n_stream, 2),
+        })
+    return out
+
+
+def main():
+    for r in rows():
+        derived = (f"nodes={r['nodes']};arcs={r['arcs']};"
+                   f"ff_bits={r['ff_bits']};lut={r['lut_weight']};"
+                   f"lat_cyc={r['latency_cycles']};"
+                   f"cyc_per_tok={r['cycles_per_token']}")
+        print(f"table1_{r['name']},{r['compiled_us_per_token']},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Pipeline parallelism scheduled by the paper's dataflow engine.
+
+Runs a 4-stage pipeline over 8 host devices, comparing the paper-faithful
+one-token-per-arc schedule (2M+S-2 steps) against the double-buffered
+dense wavefront (M+S-1 steps) — the paper's Fig. 1(b) vs Fig. 1(c).
+
+Run: PYTHONPATH=src python examples/pipeline_dataflow.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core.pipeline import (dataflow_schedule, dense_schedule,
+                                 make_stage_fn, pipeline_apply)
+from repro.models import transformer as tfm
+
+
+def main():
+    cfg = dataclasses.replace(get_arch("internlm2-1.8b").reduced(),
+                              n_layers=8, remat=False)
+    S, M, mb, seq = 4, 12, 2, 32
+    params = tfm.init_params(cfg, jax.random.key(0))
+    mesh = jax.make_mesh((S,), ("pp",))
+    x = jax.random.normal(jax.random.key(1),
+                          (M, mb, seq, cfg.d_model)) * 0.1
+    stage_fn = make_stage_fn(cfg, cfg.n_layers // S)
+
+    for name, sched in [("paper (1 token/arc)", dataflow_schedule(S, M)),
+                        ("double-buffered", dense_schedule(S, M))]:
+        fn = jax.jit(lambda lp, x: pipeline_apply(mesh, stage_fn, lp, x,
+                                                  sched))
+        y = fn(params["layers"], x)       # compile+run
+        jax.block_until_ready(y)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(params["layers"], x))
+        dt = time.perf_counter() - t0
+        print(f"{name:24s}: {sched.shape[0]:3d} schedule steps, "
+              f"{dt * 1e3:7.1f} ms/iter")
+        # correctness vs sequential execution
+        def ref(x1):
+            pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32),
+                                   (mb, seq))
+            def body(x, lp):
+                x, _ = tfm._dense_body(cfg, lp, x, pos)
+                return x, None
+            out, _ = jax.lax.scan(body, x1, params["layers"])
+            return out
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(jax.vmap(ref)(x)),
+                                   rtol=2e-4, atol=2e-4)
+    print("both schedules match the sequential reference; the dense "
+          "schedule needs", dense_schedule(S, M).shape[0], "steps vs",
+          dataflow_schedule(S, M).shape[0],
+          "for the paper's handshake cadence")
+
+
+if __name__ == "__main__":
+    main()

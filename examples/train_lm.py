@@ -1,0 +1,78 @@
+"""End-to-end training driver with fault tolerance.
+
+Trains a small LM (internlm2-family) on the synthetic pipeline, injects a
+failure mid-run, restarts from the latest checkpoint, and verifies the
+loss curve continues — the restart is byte-exact with an uninterrupted
+run (see tests/test_substrate.py).
+
+Defaults are CPU-sized (~10M params, 300 steps).  ``--preset 100m`` is
+the real-hardware configuration (d=768, 12 layers ~ 110M params).
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import shutil
+
+import jax
+
+from repro.configs.base import get_arch
+from repro.data.pipeline import SyntheticLM
+from repro.optim import adamw
+from repro.train import loop as train_loop
+
+
+def preset_cfg(preset: str):
+    base = get_arch("internlm2-1.8b")
+    if preset == "100m":
+        return dataclasses.replace(
+            base, n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+            d_ff=3072, vocab=32000, loss_chunk=256, attn_q_block=256,
+            attn_kv_block=256)
+    return dataclasses.replace(
+        base, n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+        d_ff=1024, vocab=8192, loss_chunk=64, attn_q_block=64,
+        attn_kv_block=64, compute_dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--preset", choices=["tiny", "100m"], default="tiny")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure at this step to demo restart")
+    args = ap.parse_args()
+
+    cfg = preset_cfg(args.preset)
+    src = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch, seed=0)
+    opt = adamw.OptConfig(lr=1e-3, warmup_steps=20,
+                          total_steps=args.steps)
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    lp = train_loop.LoopConfig(
+        total_steps=args.steps, ckpt_every=max(5, args.steps // 6),
+        ckpt_dir=args.ckpt_dir,
+        log_every=10, fail_at_step=args.fail_at or args.steps // 2)
+
+    print(f"== run 1 (will fail at step {lp.fail_at_step}) ==")
+    try:
+        train_loop.run(cfg, lp, opt, src, key=jax.random.key(0))
+    except train_loop.SimulatedFailure as e:
+        print(f"!! {e} — restarting from latest checkpoint")
+
+    print("== run 2 (restart) ==")
+    lp2 = dataclasses.replace(lp, fail_at_step=None)
+    out = train_loop.run(cfg, lp2, opt, src, key=jax.random.key(0))
+    print(f"resumed from step {out['start_step']}; "
+          f"final loss {out['losses'][-1]:.4f}; "
+          f"stragglers flagged: {out['straggler_events']}")
+    first = sum(out["losses"][:5]) / 5 if out["losses"] else float("nan")
+    last = sum(out["losses"][-5:]) / 5
+    print(f"loss {first:.3f} -> {last:.3f}")
+
+
+if __name__ == "__main__":
+    main()

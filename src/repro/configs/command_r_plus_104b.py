@@ -1,0 +1,4 @@
+"""--arch config (assignment-exact); see configs/base.py."""
+from repro.configs.base import COMMAND_R_PLUS_104B
+
+CONFIG = COMMAND_R_PLUS_104B

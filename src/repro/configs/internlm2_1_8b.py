@@ -1,0 +1,4 @@
+"""--arch config (assignment-exact); see configs/base.py."""
+from repro.configs.base import INTERNLM2_1_8B
+
+CONFIG = INTERNLM2_1_8B

@@ -1,0 +1,4 @@
+"""--arch config (assignment-exact); see configs/base.py."""
+from repro.configs.base import INTERNVL2_76B
+
+CONFIG = INTERNVL2_76B

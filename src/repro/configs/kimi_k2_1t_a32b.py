@@ -1,0 +1,4 @@
+"""--arch config (assignment-exact); see configs/base.py."""
+from repro.configs.base import KIMI_K2
+
+CONFIG = KIMI_K2

@@ -1,0 +1,4 @@
+"""--arch config (assignment-exact); see configs/base.py."""
+from repro.configs.base import LLAMA4_SCOUT
+
+CONFIG = LLAMA4_SCOUT

@@ -1,0 +1,4 @@
+"""--arch config (assignment-exact); see configs/base.py."""
+from repro.configs.base import RWKV6_1_6B
+
+CONFIG = RWKV6_1_6B

@@ -1,0 +1,4 @@
+"""--arch config (assignment-exact); see configs/base.py."""
+from repro.configs.base import STABLELM_1_6B
+
+CONFIG = STABLELM_1_6B

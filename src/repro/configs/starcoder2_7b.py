@@ -1,0 +1,4 @@
+"""--arch config (assignment-exact); see configs/base.py."""
+from repro.configs.base import STARCODER2_7B
+
+CONFIG = STARCODER2_7B

@@ -1,0 +1,4 @@
+"""--arch config (assignment-exact); see configs/base.py."""
+from repro.configs.base import WHISPER_MEDIUM
+
+CONFIG = WHISPER_MEDIUM

@@ -1,0 +1,4 @@
+"""--arch config (assignment-exact); see configs/base.py."""
+from repro.configs.base import ZAMBA2_7B
+
+CONFIG = ZAMBA2_7B

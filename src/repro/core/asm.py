@@ -1,0 +1,79 @@
+"""Assembler language for dataflow graphs (paper Listing 1).
+
+Syntax, one node per statement::
+
+    [lineno.] opcode arg, arg, ... ;     # comment
+
+Arguments are arc labels: inputs first, then outputs, per the opcode
+arity (e.g. ``add s10, dadoe, s11`` reads s10 and dadoe, writes s11;
+``branch s9, s8, s10, pf`` reads data s9 and control s8, writes t-output
+s10 and f-output pf; ``dmerge s2, dadoc, s1, s3`` reads a=s2, b=dadoc,
+ctrl=s1, writes s3).
+
+``const <arc> = <int>;`` declares a sticky environment bus (the FPGA input
+bus that always presents its value, e.g. the `dadoe` increment in the
+paper's Fibonacci graph).
+"""
+from __future__ import annotations
+
+import re
+
+from repro.core.graph import ARITY, Graph, Op
+
+_ALIASES = {
+    "gtdecider": Op.IFGT,
+    "gedecider": Op.IFGE,
+    "ltdecider": Op.IFLT,
+    "ledecider": Op.IFLE,
+    "eqdecider": Op.IFEQ,
+    "dfdecider": Op.IFDF,
+}
+
+_STMT = re.compile(r"^(?:\d+\s*\.)?\s*(\w+)\s+(.*)$")
+
+
+def parse(text: str, name: str = "asm") -> Graph:
+    g = Graph(name=name)
+    # strip comments, split on ';'
+    lines = []
+    for raw in text.splitlines():
+        raw = raw.split("#", 1)[0].split("//", 1)[0]
+        lines.append(raw)
+    for stmt in " ".join(lines).split(";"):
+        stmt = stmt.strip()
+        if not stmt:
+            continue
+        m = _STMT.match(stmt)
+        if not m:
+            raise SyntaxError(f"bad statement: {stmt!r}")
+        opname, rest = m.group(1).lower(), m.group(2)
+        if opname == "const":
+            arc, _, val = rest.partition("=")
+            g.const(arc.strip(), int(val.strip(), 0))
+            continue
+        if opname in _ALIASES:
+            op = _ALIASES[opname]
+        else:
+            try:
+                op = Op[opname.upper()]
+            except KeyError:
+                raise SyntaxError(f"unknown opcode {opname!r} in {stmt!r}")
+        args = [a.strip() for a in rest.split(",") if a.strip()]
+        n_in, n_out = ARITY[op]
+        if len(args) != n_in + n_out:
+            raise SyntaxError(
+                f"{opname} wants {n_in}+{n_out} args, got {args!r}")
+        g.add(op, args[:n_in], args[n_in:])
+    g.validate()
+    return g
+
+
+def emit(g: Graph) -> str:
+    """Graph -> assembler text (round-trips through :func:`parse`)."""
+    out = []
+    for arc, val in g.consts.items():
+        out.append(f"const {arc} = {int(val)};")
+    for i, n in enumerate(g.nodes, start=1):
+        args = ", ".join((*n.inputs, *n.outputs))
+        out.append(f"{i}. {n.op.name.lower()} {args};")
+    return "\n".join(out) + "\n"

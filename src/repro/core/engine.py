@@ -1,0 +1,441 @@
+"""Static dataflow token engine.
+
+Cycle-accurate, vectorized reproduction of the paper's fabric:
+
+* every arc is a register pair ``(full: bool, value)`` — the 16-bit data
+  register + 1-bit status register of paper Fig. 5 (dadoa/bita, ...);
+* a node *fires* when all its input arcs are full and all its output arcs
+  are empty (static dataflow: one token per arc);
+* one engine cycle = every ready node fires simultaneously.  Because a
+  producer may only write an arc that was already empty at the start of
+  the cycle, an arc sustains one token per two cycles — the same cadence
+  as the paper's str/ack handshake;
+* environment buses: *input* arcs are strobed with the next token of their
+  feed stream as soon as they drain; *const* arcs always present their
+  value (paper: input buses that hold data persistently, e.g. the loop
+  increment `dadoe`); *output* arcs are drained by the environment every
+  cycle, with the last value and a token count recorded.
+
+The firing step is expressed over flat arrays (opcode[N], in_idx[N,3],
+out_idx[N,2]) so that one cycle is a single fused vector computation —
+this is what the ``dataflow_fire`` Pallas kernel implements on TPU, and on
+the FPGA it is the physically-concurrent operator array.
+
+Non-determinism note: ``ndmerge`` resolves same-cycle arrivals with a
+fixed priority (input ``a`` wins).  See DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, Op
+
+_MAX_IN = 3
+_MAX_OUT = 2
+
+
+def _plan(graph: Graph):
+    """Static (numpy) arrays describing the fabric."""
+    graph.validate()
+    arcs = graph.arcs
+    aidx = {a: i for i, a in enumerate(arcs)}
+    A = len(arcs)
+    FULL_PAD = A        # dummy slot, always full (pads missing inputs)
+    EMPTY_PAD = A + 1   # dummy slot, always empty (pads missing outputs)
+
+    N = len(graph.nodes)
+    opcode = np.zeros((N,), np.int32)
+    in_idx = np.full((N, _MAX_IN), FULL_PAD, np.int32)
+    out_idx = np.full((N, _MAX_OUT), EMPTY_PAD, np.int32)
+    for i, n in enumerate(graph.nodes):
+        opcode[i] = int(n.op)
+        for k, a in enumerate(n.inputs):
+            in_idx[i, k] = aidx[a]
+        for k, a in enumerate(n.outputs):
+            out_idx[i, k] = aidx[a]
+
+    const_mask = np.zeros((A + 2,), bool)
+    for a in graph.consts:
+        const_mask[aidx[a]] = True
+
+    input_arcs = graph.input_arcs()
+    output_arcs = graph.output_arcs()
+    return dict(
+        arcs=arcs, aidx=aidx, A=A, FULL_PAD=FULL_PAD, EMPTY_PAD=EMPTY_PAD,
+        opcode=opcode, in_idx=in_idx, out_idx=out_idx,
+        const_mask=const_mask, input_arcs=input_arcs,
+        output_arcs=output_arcs,
+    )
+
+
+def _alu(op, a, b, dtype):
+    """All primitive results for operands a, b; select by opcode later."""
+    is_int = jnp.issubdtype(dtype, jnp.integer)
+    if is_int:
+        bs = jnp.clip(b, 0, 31)
+        safe_b = jnp.where(b == 0, 1, b)
+        res = {
+            Op.ADD: a + b, Op.SUB: a - b, Op.MUL: a * b,
+            Op.DIV: jnp.where(b == 0, 0, a // safe_b),
+            Op.AND: a & b, Op.OR: a | b, Op.XOR: a ^ b,
+            Op.MAX: jnp.maximum(a, b), Op.MIN: jnp.minimum(a, b),
+            Op.SHL: a << bs, Op.SHR: a >> bs,
+            Op.NOT: (a == 0).astype(dtype),
+        }
+    else:
+        safe_b = jnp.where(b == 0, 1.0, b)
+        two_b = jnp.exp2(b)
+        res = {
+            Op.ADD: a + b, Op.SUB: a - b, Op.MUL: a * b,
+            Op.DIV: jnp.where(b == 0, 0.0, a / safe_b),
+            Op.AND: ((a != 0) & (b != 0)).astype(dtype),
+            Op.OR: ((a != 0) | (b != 0)).astype(dtype),
+            Op.XOR: ((a != 0) ^ (b != 0)).astype(dtype),
+            Op.MAX: jnp.maximum(a, b), Op.MIN: jnp.minimum(a, b),
+            Op.SHL: a * two_b, Op.SHR: a / jnp.where(two_b == 0, 1, two_b),
+            Op.NOT: (a == 0).astype(dtype),
+        }
+    res.update({
+        Op.IFGT: (a > b).astype(dtype), Op.IFGE: (a >= b).astype(dtype),
+        Op.IFLT: (a < b).astype(dtype), Op.IFLE: (a <= b).astype(dtype),
+        Op.IFEQ: (a == b).astype(dtype), Op.IFDF: (a != b).astype(dtype),
+    })
+    return res
+
+
+def _truthy(v):
+    """Scalar truth of a (possibly tensor) control token: element 0."""
+    flat = v.reshape(v.shape[0], -1)
+    return flat[:, 0] != 0
+
+
+@dataclasses.dataclass
+class EngineResult:
+    outputs: dict       # arc -> last token value (jnp array)
+    counts: dict        # arc -> number of tokens drained
+    cycles: int
+    fired: int          # total node firings
+
+
+class DataflowEngine:
+    """Cycle-accurate executor for a static dataflow :class:`Graph`."""
+
+    def __init__(self, graph: Graph, token_shape: tuple[int, ...] = (),
+                 dtype=jnp.int32, max_cycles: int = 100_000):
+        self.graph = graph
+        self.token_shape = tuple(token_shape)
+        self.dtype = jnp.dtype(dtype)
+        self.max_cycles = max_cycles
+        self.p = _plan(graph)
+        self._run = jax.jit(self._run_impl, static_argnames=("max_cycles",))
+
+    # -- public ---------------------------------------------------------
+    def run(self, feeds: Mapping[str, object] | None = None,
+            max_cycles: int | None = None) -> EngineResult:
+        """feeds: arc -> [k, *token_shape] stream of tokens (k may vary)."""
+        p = self.p
+        feeds = dict(feeds or {})
+        unknown = set(feeds) - set(p["input_arcs"])
+        if unknown:
+            raise ValueError(f"feeds for non-input arcs: {sorted(unknown)}")
+        n_in = len(p["input_arcs"])
+        max_len = max((np.shape(v)[0] for v in feeds.values()), default=0)
+        max_len = max(max_len, 1)
+        feed_vals = np.zeros((n_in, max_len, *self.token_shape),
+                             self.dtype)
+        feed_len = np.zeros((n_in,), np.int32)
+        for k, a in enumerate(p["input_arcs"]):
+            if a in feeds:
+                v = np.asarray(feeds[a], self.dtype)
+                if v.shape[1:] != self.token_shape:
+                    v = np.broadcast_to(
+                        v.reshape(v.shape[0], *([1] * len(self.token_shape))),
+                        (v.shape[0], *self.token_shape)).astype(self.dtype)
+                feed_vals[k, :v.shape[0]] = v
+                feed_len[k] = v.shape[0]
+        outs, counts, cycles, fired = self._run(
+            jnp.asarray(feed_vals), jnp.asarray(feed_len),
+            max_cycles=max_cycles or self.max_cycles)
+        out_arcs = p["output_arcs"]
+        return EngineResult(
+            outputs={a: outs[i] for i, a in enumerate(out_arcs)},
+            counts={a: int(counts[i]) for i, a in enumerate(out_arcs)},
+            cycles=int(cycles), fired=int(fired))
+
+    # -- implementation ---------------------------------------------------
+    def _run_impl(self, feed_vals, feed_len, *, max_cycles):
+        p = self.p
+        A, ts, dtype = p["A"], self.token_shape, self.dtype
+        opcode = jnp.asarray(p["opcode"])
+        in_idx = jnp.asarray(p["in_idx"])
+        out_idx = jnp.asarray(p["out_idx"])
+        const_mask = jnp.asarray(p["const_mask"])
+        in_arc_idx = jnp.asarray(
+            [p["aidx"][a] for a in p["input_arcs"]], jnp.int32).reshape(-1)
+        out_arc_idx = jnp.asarray(
+            [p["aidx"][a] for a in p["output_arcs"]], jnp.int32).reshape(-1)
+
+        full0 = jnp.zeros((A + 2,), bool).at[p["FULL_PAD"]].set(True)
+        full0 = jnp.where(const_mask, True, full0)
+        val0 = jnp.zeros((A + 2, *ts), dtype)
+        for a, v in self.graph.consts.items():
+            val0 = val0.at[p["aidx"][a]].set(jnp.asarray(v, dtype))
+
+        n_out = max(len(p["output_arcs"]), 1)
+        state0 = dict(
+            full=full0, val=val0,
+            ptr=jnp.zeros((max(len(p["input_arcs"]), 1),), jnp.int32),
+            out_last=jnp.zeros((n_out, *ts), dtype),
+            out_count=jnp.zeros((n_out,), jnp.int32),
+            cycles=jnp.int32(0), fired=jnp.int32(0),
+            progress=jnp.bool_(True),
+        )
+
+        EMPTY_PAD = p["EMPTY_PAD"]
+        FULL_PAD = p["FULL_PAD"]
+
+        def cycle(s):
+            full, val = s["full"], s["val"]
+            # --- 1. strobe environment input buses -----------------------
+            if len(p["input_arcs"]):
+                can_feed = (~full[in_arc_idx]) & (s["ptr"] < feed_len)
+                nxt = jnp.take_along_axis(
+                    feed_vals, s["ptr"].reshape(-1, 1, *([1] * len(ts))),
+                    axis=1)[:, 0]
+                tgt = jnp.where(can_feed, in_arc_idx, EMPTY_PAD)
+                val = val.at[tgt].set(
+                    jnp.where(can_feed.reshape(-1, *([1] * len(ts))),
+                              nxt, val[tgt]))
+                full = full.at[tgt].set(can_feed | full[tgt])
+                ptr = s["ptr"] + can_feed
+                fed_any = jnp.any(can_feed)
+                full = full.at[EMPTY_PAD].set(False)
+            else:
+                ptr, fed_any = s["ptr"], jnp.bool_(False)
+
+            # --- 2. fire every ready node --------------------------------
+            inf = full[in_idx]                       # [N,3]
+            oute = ~full[out_idx]                    # [N,2]
+            a = val[in_idx[:, 0]]
+            b = val[in_idx[:, 1]]
+            ctrl3 = _truthy(val[in_idx[:, 2]])       # dmerge control
+            ctrl2 = _truthy(b)                       # branch control
+            all_in = inf.all(axis=1)
+            all_out = oute.all(axis=1)
+
+            is_nd = opcode == int(Op.NDMERGE)
+            is_dm = opcode == int(Op.DMERGE)
+            is_br = opcode == int(Op.BRANCH)
+
+            dm_chosen_full = jnp.where(ctrl3, inf[:, 0], inf[:, 1])
+            ready = all_in & all_out
+            ready = jnp.where(is_nd, (inf[:, 0] | inf[:, 1]) & all_out, ready)
+            ready = jnp.where(is_dm, inf[:, 2] & dm_chosen_full & all_out,
+                              ready)
+            ready = jnp.where(
+                is_br,
+                inf[:, 0] & inf[:, 1]
+                & jnp.where(ctrl2, oute[:, 0], oute[:, 1]),
+                ready)
+
+            # operand/result values
+            nd_val = jnp.where(_expand(inf[:, 0], ts), a, b)
+            dm_val = jnp.where(_expand(ctrl3, ts), a, b)
+            alu = _alu(Op, a, b, dtype)
+            z = a  # default (COPY / BRANCH route a; SINK ignores)
+            for op, r in alu.items():
+                z = jnp.where(_expand(opcode == int(op), ts), r, z)
+            z = jnp.where(_expand(is_nd, ts), nd_val, z)
+            z = jnp.where(_expand(is_dm, ts), dm_val, z)
+
+            # consumption mask [N,3]
+            consume = ready[:, None] & jnp.ones((1, _MAX_IN), bool)
+            nd_pick = jnp.stack([inf[:, 0], ~inf[:, 0],
+                                 jnp.zeros_like(inf[:, 0])], axis=1)
+            dm_pick = jnp.stack([ctrl3, ~ctrl3,
+                                 jnp.ones_like(ctrl3)], axis=1)
+            consume = jnp.where(is_nd[:, None], ready[:, None] & nd_pick,
+                                consume)
+            consume = jnp.where(is_dm[:, None], ready[:, None] & dm_pick,
+                                consume)
+
+            # production mask [N,2] and produced values
+            produce = ready[:, None] & jnp.ones((1, _MAX_OUT), bool)
+            br_pick = jnp.stack([ctrl2, ~ctrl2], axis=1)
+            produce = jnp.where(is_br[:, None], ready[:, None] & br_pick,
+                                produce)
+            pvals = jnp.stack([z, z], axis=1)        # [N,2,*ts]
+
+            # scatter: consume, then produce (see module docstring)
+            cidx = jnp.where(consume, in_idx, EMPTY_PAD).reshape(-1)
+            full = full.at[cidx].set(False)
+            pidx = jnp.where(produce, out_idx, EMPTY_PAD).reshape(-1)
+            full = full.at[pidx].set(True)
+            val = val.at[pidx].set(pvals.reshape(-1, *ts))
+            # restore dummy slots
+            full = full.at[FULL_PAD].set(True)
+            full = full.at[EMPTY_PAD].set(False)
+            full = jnp.where(const_mask, True, full)
+
+            # --- 3. environment drains output buses ----------------------
+            if len(p["output_arcs"]):
+                got = full[out_arc_idx]
+                out_last = jnp.where(_expand(got, ts), val[out_arc_idx],
+                                     s["out_last"])
+                out_count = s["out_count"] + got
+                full = full.at[out_arc_idx].set(False)
+                drained_any = jnp.any(got)
+            else:
+                out_last, out_count = s["out_last"], s["out_count"]
+                drained_any = jnp.bool_(False)
+
+            n_fired = jnp.sum(ready.astype(jnp.int32))
+            return dict(
+                full=full, val=val, ptr=ptr, out_last=out_last,
+                out_count=out_count, cycles=s["cycles"] + 1,
+                fired=s["fired"] + n_fired,
+                progress=fed_any | drained_any | (n_fired > 0))
+
+        def cond(s):
+            return s["progress"] & (s["cycles"] < max_cycles)
+
+        s = jax.lax.while_loop(cond, cycle, state0)
+        return s["out_last"], s["out_count"], s["cycles"], s["fired"]
+
+
+def _expand(mask, ts):
+    return mask.reshape(*mask.shape, *([1] * len(ts)))
+
+
+# ---------------------------------------------------------------------------
+# Pure-numpy reference engine (oracle for property tests + Pallas kernel ref)
+# ---------------------------------------------------------------------------
+def run_reference(graph: Graph, feeds=None, token_shape=(), dtype=np.int32,
+                  max_cycles: int = 100_000, trace=None) -> EngineResult:
+    """Slow, obviously-correct mirror of :class:`DataflowEngine`.
+
+    trace: optional callback receiving (cycle, node_index, value) for
+    every firing — used e.g. to extract pipeline schedules
+    (core/pipeline.py)."""
+    p = _plan(graph)
+    feeds = {a: np.asarray(v, dtype).reshape(-1, *token_shape)
+             if np.asarray(v).ndim == 1 and token_shape == ()
+             else np.broadcast_to(
+                 np.asarray(v, dtype).reshape(np.shape(v)[0],
+                                              *([1] * len(token_shape))),
+                 (np.shape(v)[0], *token_shape))
+             if np.asarray(v).ndim == 1
+             else np.asarray(v, dtype)
+             for a, v in (feeds or {}).items()}
+    full = {a: False for a in p["arcs"]}
+    val = {a: np.zeros(token_shape, dtype) for a in p["arcs"]}
+    for a, v in graph.consts.items():
+        full[a] = True
+        val[a] = np.full(token_shape, v, dtype)
+    ptr = {a: 0 for a in p["input_arcs"]}
+    out_last = {a: np.zeros(token_shape, dtype) for a in p["output_arcs"]}
+    out_count = {a: 0 for a in p["output_arcs"]}
+    is_int = np.issubdtype(dtype, np.integer)
+
+    def compute(op, a, b):
+        if op in (Op.COPY, Op.BRANCH, Op.SINK):
+            return a
+        if op == Op.ADD: return a + b
+        if op == Op.SUB: return a - b
+        if op == Op.MUL: return a * b
+        if op == Op.DIV:
+            return np.where(b == 0, 0, a // np.where(b == 0, 1, b)) if is_int \
+                else np.where(b == 0, 0.0, a / np.where(b == 0, 1.0, b))
+        if op == Op.AND:
+            return (a & b) if is_int else ((a != 0) & (b != 0)).astype(dtype)
+        if op == Op.OR:
+            return (a | b) if is_int else ((a != 0) | (b != 0)).astype(dtype)
+        if op == Op.XOR:
+            return (a ^ b) if is_int else ((a != 0) ^ (b != 0)).astype(dtype)
+        if op == Op.MAX: return np.maximum(a, b)
+        if op == Op.MIN: return np.minimum(a, b)
+        if op == Op.SHL:
+            return (a << np.clip(b, 0, 31)) if is_int else a * np.exp2(b)
+        if op == Op.SHR:
+            return (a >> np.clip(b, 0, 31)) if is_int else a / np.exp2(b)
+        if op == Op.NOT: return (a == 0).astype(dtype)
+        if op == Op.IFGT: return (a > b).astype(dtype)
+        if op == Op.IFGE: return (a >= b).astype(dtype)
+        if op == Op.IFLT: return (a < b).astype(dtype)
+        if op == Op.IFLE: return (a <= b).astype(dtype)
+        if op == Op.IFEQ: return (a == b).astype(dtype)
+        if op == Op.IFDF: return (a != b).astype(dtype)
+        raise AssertionError(op)
+
+    def truthy(v):
+        return np.asarray(v).ravel()[0] != 0
+
+    cycles = fired = 0
+    progress = True
+    while progress and cycles < max_cycles:
+        progress = False
+        # 1. feed
+        for a in p["input_arcs"]:
+            if not full[a] and a in feeds and ptr[a] < len(feeds[a]):
+                val[a] = feeds[a][ptr[a]]
+                full[a] = True
+                ptr[a] += 1
+                progress = True
+        # 2. fire (simultaneous: snapshot)
+        sfull = dict(full)
+        sval = dict(val)
+        plans = []
+        for n_idx, n in enumerate(graph.nodes):
+            i = n.inputs
+            o = n.outputs
+            if n.op == Op.NDMERGE:
+                rdy = (sfull[i[0]] or sfull[i[1]]) and not sfull[o[0]]
+                if rdy:
+                    src = i[0] if sfull[i[0]] else i[1]
+                    plans.append((n_idx, [src], [(o[0], sval[src])]))
+            elif n.op == Op.DMERGE:
+                if sfull[i[2]]:
+                    src = i[0] if truthy(sval[i[2]]) else i[1]
+                    if sfull[src] and not sfull[o[0]]:
+                        plans.append((n_idx, [src, i[2]],
+                                      [(o[0], sval[src])]))
+            elif n.op == Op.BRANCH:
+                if sfull[i[0]] and sfull[i[1]]:
+                    dst = o[0] if truthy(sval[i[1]]) else o[1]
+                    if not sfull[dst]:
+                        plans.append((n_idx, list(i), [(dst, sval[i[0]])]))
+            else:
+                if all(sfull[x] for x in i) and not any(sfull[x] for x in o):
+                    aop = sval[i[0]]
+                    bop = sval[i[1]] if len(i) > 1 else aop
+                    z = compute(n.op, aop, bop)
+                    plans.append((n_idx, list(i), [(x, z) for x in o]))
+        for n_idx, cons, prods in plans:
+            for x in cons:
+                full[x] = False
+            for x, v in prods:
+                full[x] = True
+                val[x] = v
+            if trace is not None:
+                tv = prods[0][1] if prods else val.get(cons[0], 0)
+                trace((cycles + 1, n_idx, int(np.asarray(tv).ravel()[0])))
+            fired += 1
+            progress = True
+        for a in graph.consts:
+            full[a] = True
+        # 3. drain
+        for a in p["output_arcs"]:
+            if full[a]:
+                out_last[a] = val[a]
+                out_count[a] += 1
+                full[a] = False
+                progress = True
+        cycles += 1
+    return EngineResult(outputs=out_last, counts=out_count, cycles=cycles,
+                        fired=fired)

@@ -1,0 +1,169 @@
+"""Pallas kernel for one static-dataflow engine cycle ("fire step").
+
+The paper's FPGA executes all ready operators concurrently; on TPU the
+cycle is one vectorized pass.  The kernel is *gather-only* (TPU-friendly,
+no scatters): node-side arrays compute readiness and results, then each
+arc pulls its next state from its (unique) producer/consumer — legal
+precisely BECAUSE of the paper's one-sender/one-receiver channel rule.
+
+Inputs (all VMEM-resident; fabrics are small — one FPGA's worth):
+  full[A2] int32, val[A2] int32       arc registers (+2 dummy slots)
+  opcode[N2], in_idx[N2,3], out_idx[N2,2]   node table (+1 dummy node)
+  prod_node/prod_slot[A2], cons_node/cons_slot[A2]  arc adjacency
+  const_mask[A2]
+Outputs: new full/val, fired count.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.graph import Op
+
+
+def _ready_and_z(opcode, in_idx, out_idx, full, val):
+    """Vectorized firing rule (shared by kernel and ref)."""
+    inf = full[in_idx] > 0                    # [N,3]
+    oute = full[out_idx] == 0                 # [N,2]
+    a = val[in_idx[:, 0]]
+    b = val[in_idx[:, 1]]
+    c = val[in_idx[:, 2]]
+    all_in = inf.all(axis=1)
+    all_out = oute.all(axis=1)
+
+    is_nd = opcode == int(Op.NDMERGE)
+    is_dm = opcode == int(Op.DMERGE)
+    is_br = opcode == int(Op.BRANCH)
+    ctrl3 = c != 0
+    ctrl2 = b != 0
+
+    dm_chosen = jnp.where(ctrl3, inf[:, 0], inf[:, 1])
+    ready = all_in & all_out
+    ready = jnp.where(is_nd, (inf[:, 0] | inf[:, 1]) & all_out, ready)
+    ready = jnp.where(is_dm, inf[:, 2] & dm_chosen & all_out, ready)
+    ready = jnp.where(is_br, inf[:, 0] & inf[:, 1] &
+                      jnp.where(ctrl2, oute[:, 0], oute[:, 1]), ready)
+
+    bs = jnp.clip(b, 0, 31)
+    safe_b = jnp.where(b == 0, 1, b)
+    zs = {
+        Op.ADD: a + b, Op.SUB: a - b, Op.MUL: a * b,
+        Op.DIV: jnp.where(b == 0, 0, a // safe_b),
+        Op.AND: a & b, Op.OR: a | b, Op.XOR: a ^ b,
+        Op.MAX: jnp.maximum(a, b), Op.MIN: jnp.minimum(a, b),
+        Op.SHL: a << bs, Op.SHR: a >> bs,
+        Op.NOT: (a == 0).astype(a.dtype),
+        Op.IFGT: (a > b).astype(a.dtype), Op.IFGE: (a >= b).astype(a.dtype),
+        Op.IFLT: (a < b).astype(a.dtype), Op.IFLE: (a <= b).astype(a.dtype),
+        Op.IFEQ: (a == b).astype(a.dtype),
+        Op.IFDF: (a != b).astype(a.dtype),
+        Op.NDMERGE: jnp.where(inf[:, 0], a, b),
+        Op.DMERGE: jnp.where(ctrl3, a, b),
+    }
+    z = a
+    for op, r in zs.items():
+        z = jnp.where(opcode == int(op), r, z)
+
+    # per-slot consume/produce masks
+    nd_pick = jnp.stack([inf[:, 0], ~inf[:, 0],
+                         jnp.zeros_like(inf[:, 0])], 1)
+    dm_pick = jnp.stack([ctrl3, ~ctrl3, jnp.ones_like(ctrl3)], 1)
+    consume = jnp.ones_like(inf)
+    consume = jnp.where(is_nd[:, None], nd_pick, consume)
+    consume = jnp.where(is_dm[:, None], dm_pick, consume)
+    consume &= ready[:, None]
+    br_pick = jnp.stack([ctrl2, ~ctrl2], 1)
+    produce = jnp.ones_like(oute)
+    produce = jnp.where(is_br[:, None], br_pick, produce)
+    produce &= ready[:, None]
+    return ready, z, consume, produce
+
+
+def _fire_body(opcode, in_idx, out_idx, prod_node, prod_slot, cons_node,
+               cons_slot, const_mask, full, val):
+    ready, z, consume, produce = _ready_and_z(opcode, in_idx, out_idx,
+                                              full, val)
+    # arc-side gather (single producer / single consumer per channel)
+    produced = produce[prod_node, prod_slot]
+    consumed = consume[cons_node, cons_slot]
+    new_full = ((full > 0) & ~consumed) | produced
+    new_full = new_full | (const_mask > 0)
+    new_val = jnp.where(produced, z[prod_node], val)
+    return (new_full.astype(full.dtype), new_val,
+            ready.astype(jnp.int32).sum())
+
+
+def _kernel(opcode_ref, in_idx_ref, out_idx_ref, prod_node_ref,
+            prod_slot_ref, cons_node_ref, cons_slot_ref, const_ref,
+            full_ref, val_ref, nfull_ref, nval_ref, fired_ref):
+    nf, nv, fired = _fire_body(
+        opcode_ref[...], in_idx_ref[...], out_idx_ref[...],
+        prod_node_ref[...], prod_slot_ref[...], cons_node_ref[...],
+        cons_slot_ref[...], const_ref[...], full_ref[...], val_ref[...])
+    nfull_ref[...] = nf
+    nval_ref[...] = nv
+    fired_ref[0] = fired
+
+
+def plan_arrays(graph):
+    """Static numpy tables incl. arc adjacency (dummy node N = never
+    ready; dummy slots pad)."""
+    import numpy as np
+    from repro.core.engine import _plan
+    p = _plan(graph)
+    A2 = p["A"] + 2
+    N = len(graph.nodes)
+    N2 = N + 1                                  # dummy node
+    opcode = np.concatenate([p["opcode"], [int(Op.SINK)]]).astype(np.int32)
+    in_idx = np.concatenate(
+        [p["in_idx"], [[p["EMPTY_PAD"]] * 3]]).astype(np.int32)
+    out_idx = np.concatenate(
+        [p["out_idx"], [[p["EMPTY_PAD"]] * 2]]).astype(np.int32)
+    prod_node = np.full((A2,), N, np.int32)
+    prod_slot = np.zeros((A2,), np.int32)
+    cons_node = np.full((A2,), N, np.int32)
+    cons_slot = np.zeros((A2,), np.int32)
+    for i, n in enumerate(graph.nodes):
+        for s, arc in enumerate(n.outputs):
+            prod_node[p["aidx"][arc]] = i
+            prod_slot[p["aidx"][arc]] = s
+        for s, arc in enumerate(n.inputs):
+            if arc not in graph.consts:      # consts are never consumed
+                cons_node[p["aidx"][arc]] = i
+                cons_slot[p["aidx"][arc]] = s
+    const_mask = p["const_mask"].astype(np.int32)
+    return dict(opcode=opcode, in_idx=in_idx, out_idx=out_idx,
+                prod_node=prod_node, prod_slot=prod_slot,
+                cons_node=cons_node, cons_slot=cons_slot,
+                const_mask=const_mask, plan=p)
+
+
+def fire_step_pallas(tables, full, val, interpret=None):
+    """One engine cycle via pallas_call. full/val: int32[A+2]."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    A2 = full.shape[0]
+    N2 = tables["opcode"].shape[0]
+    out = pl.pallas_call(
+        _kernel,
+        in_specs=[pl.BlockSpec(x.shape, lambda n=x.ndim: (0,) * n)
+                  for x in (tables["opcode"], tables["in_idx"],
+                            tables["out_idx"], tables["prod_node"],
+                            tables["prod_slot"], tables["cons_node"],
+                            tables["cons_slot"], tables["const_mask"])]
+        + [pl.BlockSpec((A2,), lambda: (0,)),
+           pl.BlockSpec((A2,), lambda: (0,))],
+        out_specs=[pl.BlockSpec((A2,), lambda: (0,)),
+                   pl.BlockSpec((A2,), lambda: (0,)),
+                   pl.BlockSpec((1,), lambda: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((A2,), jnp.int32),
+                   jax.ShapeDtypeStruct((A2,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)],
+        interpret=interpret,
+    )(tables["opcode"], tables["in_idx"], tables["out_idx"],
+      tables["prod_node"], tables["prod_slot"], tables["cons_node"],
+      tables["cons_slot"], tables["const_mask"], full, val)
+    return out

@@ -1,0 +1,118 @@
+"""Pallas TPU flash attention (GQA-aware, causal).
+
+Grid: (batch*heads, q_blocks, kv_blocks); the kv axis is the innermost
+(sequential on TPU) so (m, l, acc) accumulators live in VMEM scratch
+across kv steps.  BlockSpecs keep one [bq, hd] q tile, one [bk, hd] k/v
+tile and the f32 accumulators in VMEM; hd and block sizes should be
+multiples of 128 on real hardware (validated shapes in tests cover
+smaller tiles via interpret mode).
+
+K/V are GQA-shaped [B, Skv, Hkv, hd]; the index map folds the q-head ->
+kv-head mapping (h // group) so no materialized head broadcast is needed.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, bq, bk, n_kv, seq_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                  # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)
+    s = q @ k.T                                       # [bq, bk]
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < seq_kv
+    if causal:
+        mask &= qpos >= kpos
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, bq=128, bk=128,
+                           interpret=None):
+    """q: [B, Sq, H, hd]; k,v: [B, Skv, Hkv, hd] -> [B, Sq, H, hd]."""
+    B, Sq, H, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    pad_q = (-Sq) % bq
+    pad_k = (-Skv) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    n_q = (Sq + pad_q) // bq
+    n_kv = (Skv + pad_k) // bk
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    # layout: [B*H, Sq, hd] for q/o ; k/v indexed through head map
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, Sq + pad_q, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv + pad_k, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv + pad_k, hd)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return (bh // H * Hkv + (bh % H) // G, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / math.sqrt(hd),
+                          causal=causal, bq=bq, bk=bk, n_kv=n_kv,
+                          seq_kv=Skv),
+        grid=(B * H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), q_map),
+            pl.BlockSpec((1, bk, hd), kv_map),
+            pl.BlockSpec((1, bk, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq + pad_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu_scratch((bq,), jnp.float32),
+            pltpu_scratch((bq,), jnp.float32),
+            pltpu_scratch((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    out = out.reshape(B, H, Sq + pad_q, hd)[:, :, :Sq]
+    return out.transpose(0, 2, 1, 3)
+
+
+def pltpu_scratch(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

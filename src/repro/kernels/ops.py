@@ -1,0 +1,91 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On TPU these call the compiled kernels; on CPU (this container) they run
+in interpret mode — same kernel body, Python-evaluated — so correctness
+is validated everywhere while the BlockSpec tiling targets real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.dataflow_fire import fire_step_pallas, plan_arrays
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128):
+    return flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "rows_blk"))
+def rmsnorm(x, w, eps=1e-5, rows_blk=256):
+    return rmsnorm_pallas(x, w, eps=eps, rows_blk=rows_blk)
+
+
+def make_fire_step(graph):
+    """Compile the dataflow fire-step kernel for a fabric; returns
+    (tables, jitted fn(full, val) -> (full', val', fired))."""
+    import jax.numpy as jnp
+    tables = plan_arrays(graph)
+    jt = {k: jnp.asarray(v) for k, v in tables.items() if k != "plan"}
+    jt["plan"] = tables["plan"]
+
+    @jax.jit
+    def step(full, val):
+        return fire_step_pallas(jt, full, val)
+
+    return tables, step
+
+
+def run_fabric(graph, feeds, dtype=None, max_cycles: int = 10_000):
+    """Drive a fabric to completion using the Pallas fire-step kernel,
+    with the environment (feed/drain) handled host-side.  Returns an
+    EngineResult mirroring repro.core.engine semantics."""
+    import numpy as np
+    from repro.core.engine import EngineResult
+
+    tables, step = make_fire_step(graph)
+    p = tables["plan"]
+    A2 = p["A"] + 2
+    full = np.zeros((A2,), np.int32)
+    val = np.zeros((A2,), np.int32)
+    full[p["FULL_PAD"]] = 1
+    for a, v in graph.consts.items():
+        full[p["aidx"][a]] = 1
+        val[p["aidx"][a]] = int(v)
+    feeds = {a: np.asarray(v, np.int32).reshape(-1)
+             for a, v in (feeds or {}).items()}
+    ptr = {a: 0 for a in p["input_arcs"]}
+    out_last = {a: np.int32(0) for a in p["output_arcs"]}
+    out_count = {a: 0 for a in p["output_arcs"]}
+    cycles = fired = 0
+    progress = True
+    while progress and cycles < max_cycles:
+        progress = False
+        for a in p["input_arcs"]:
+            i = p["aidx"][a]
+            if not full[i] and a in feeds and ptr[a] < len(feeds[a]):
+                val[i] = feeds[a][ptr[a]]
+                full[i] = 1
+                ptr[a] += 1
+                progress = True
+        nf, nv, nfired = step(full, val)
+        full, val = np.asarray(nf).copy(), np.asarray(nv).copy()
+        full[p["EMPTY_PAD"]] = 0
+        full[p["FULL_PAD"]] = 1
+        k = int(nfired[0])
+        fired += k
+        progress = progress or k > 0
+        for a in p["output_arcs"]:
+            i = p["aidx"][a]
+            if full[i]:
+                out_last[a] = val[i]
+                out_count[a] += 1
+                full[i] = 0
+                progress = True
+        cycles += 1
+    return EngineResult(outputs=out_last, counts=out_count, cycles=cycles,
+                        fired=fired)

@@ -1,0 +1,253 @@
+"""Trip-count-aware analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+undercounts scan-over-layers programs by ~n_layers.  XLA annotates every
+scan-derived while with ``backend_config={"known_trip_count":{"n":...}}``,
+so this module walks the computation graph from ENTRY, multiplying
+while-body costs by their trip counts (nested loops multiply), and
+reports:
+
+  * flops            — 2*M*N*K for every dot (incl. dots inside fusions)
+  * traffic_bytes    — fusion-boundary operand+output bytes (an HBM
+                       traffic proxy: fusion internals never materialize)
+  * collective_bytes — per collective op kind, wire-byte weighted
+                       (all-reduce counted 2x), trip-count multiplied
+
+Shapes are per-chip (post-partitioning), so all numbers are per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\))|(?:[a-z]\w*\["
+    r"[0-9,]*\](?:\{[^}]*\})?))\s*([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^{]*)?\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_elems_bytes(shape_str: str):
+    total_b = 0
+    total_e = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_e += n
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_e, total_b
+
+
+def _dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str     # everything after the opening paren
+
+
+def parse_computations(text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    cur: list[Instr] | None = None
+    cur_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and ("->" in line or line.strip().startswith("ENTRY")):
+                cur_name, cur = m.group(1), []
+                comps[cur_name] = cur
+                if line.strip().startswith("ENTRY"):
+                    comps["__entry__"] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.append(Instr(m.group(1), m.group(2), m.group(3),
+                             m.group(4)))
+    return comps
+
+
+_SKIP_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+                 "bitcast", "while", "conditional", "call", "after-all",
+                 "partition-id", "replica-id", "iota"}
+
+
+def _sub_computations(instr: Instr):
+    """Computation names referenced via calls=/body=/condition=/branches."""
+    out = []
+    for key in ("calls=", "body=", "condition=", "to_apply="):
+        for m in re.finditer(key + r"%?([\w.\-]+)", instr.rest):
+            out.append((key[:-1], m.group(1)))
+    m = re.search(r"branch_computations=\{([^}]*)\}", instr.rest)
+    if m:
+        for name in m.group(1).split(","):
+            out.append(("branch", name.strip().lstrip("%")))
+    return out
+
+
+class HloCost:
+    """v2: dynamic-slice / dynamic-update-slice (and fusions rooted in
+    them) are buffer-aliased by XLA — traffic counts only the touched
+    slice, not the whole carried scan stack (which inflated loop bodies
+    by the trip count in v1)."""
+
+    def __init__(self, text: str, detail: bool = False):
+        self.comps = parse_computations(text)
+        self.symbols: dict[str, dict[str, str]] = {}
+        self.roots: dict[str, str] = {}
+        for name, instrs in self.comps.items():
+            tab = {}
+            for ins in instrs:
+                tab[ins.name] = ins.type_str
+            self.symbols[name] = tab
+            if instrs:
+                self.roots[name] = instrs[-1].opcode
+        self.flops = 0.0
+        self.traffic = 0.0
+        self.coll = defaultdict(float)
+        self.coll_count = 0
+        self.detail = defaultdict(float) if detail else None
+        self._walk("__entry__", 1.0, count_traffic=True)
+
+    # ------------------------------------------------------------------
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        out_e, _ = _shape_elems_bytes(ins.type_str)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+        ops = _OPERAND_RE.findall(ins.rest.split("),")[0] + ")")
+        if not m or not ops:
+            return 2.0 * out_e
+        lhs_type = self.symbols[comp].get(ops[0], "")
+        lhs_dims = _dims(lhs_type)
+        k = 1
+        for ci in m.group(1).split(","):
+            if ci and int(ci) < len(lhs_dims):
+                k *= lhs_dims[int(ci)]
+        return 2.0 * out_e * k
+
+    def _walk(self, comp_name: str, mult: float, count_traffic: bool,
+              flops_only: bool = False):
+        instrs = self.comps.get(comp_name)
+        if instrs is None:
+            return
+        for ins in instrs:
+            op = ins.opcode
+            base = op.replace("-start", "")
+            if base in ("dot", "convolution"):
+                self.flops += mult * self._dot_flops(comp_name, ins)
+            if not flops_only and base in COLLECTIVES:
+                _, b = _shape_elems_bytes(ins.type_str)
+                if op.endswith("-start") and base == "all-gather":
+                    # output of all-gather-start is (in, out) tuple; take
+                    # the larger half as the payload
+                    b = b  # tuple counted; acceptable upper bound
+                w = 2.0 * b if base == "all-reduce" else b
+                self.coll[base] += mult * w
+                self.coll_count += 1
+            if op == "while":
+                m = _TRIP_RE.search(ins.rest)
+                trip = float(m.group(1)) if m else 1.0
+                for _, sub in _sub_computations(ins):
+                    self._walk(sub, mult * trip, count_traffic,
+                               flops_only)
+            elif op == "conditional":
+                for _, sub in _sub_computations(ins):
+                    self._walk(sub, mult, count_traffic, flops_only)
+            elif op == "fusion":
+                # flops inside fusion bodies still execute; traffic does
+                # not (values stay in registers/VMEM)
+                for kind, sub in _sub_computations(ins):
+                    if kind == "calls":
+                        self._walk(sub, mult, count_traffic=False,
+                                   flops_only=True)
+            elif op == "call":
+                for kind, sub in _sub_computations(ins):
+                    if kind == "to_apply" or kind == "calls":
+                        self._walk(sub, mult, count_traffic, flops_only)
+            if count_traffic and not flops_only and \
+                    op not in _SKIP_TRAFFIC and not op.endswith("-done"):
+                _, out_b = _shape_elems_bytes(ins.type_str)
+                in_b, max_in = 0, 0
+                arg_str = ins.rest.split("),")[0]
+                for o in _OPERAND_RE.findall(arg_str):
+                    t = self.symbols[comp_name].get(o)
+                    if t:
+                        _, ob = _shape_elems_bytes(t)
+                        in_b += ob
+                        max_in = max(max_in, ob)
+                update_b = None
+                if op == "dynamic-update-slice":
+                    ops_ = _OPERAND_RE.findall(arg_str)
+                    if len(ops_) > 1:
+                        t = self.symbols[comp_name].get(ops_[1])
+                        if t:
+                            update_b = _shape_elems_bytes(t)[1]
+                elif op == "fusion":
+                    for kind, sub in _sub_computations(ins):
+                        if kind != "calls":
+                            continue
+                        if self.roots.get(sub) == "dynamic-update-slice":
+                            root = self.comps[sub][-1]
+                            rops = _OPERAND_RE.findall(
+                                root.rest.split("),")[0] + ")")
+                            if len(rops) > 1:
+                                t = self.symbols[sub].get(rops[1])
+                                if t:
+                                    update_b = _shape_elems_bytes(t)[1]
+                            if update_b is None:
+                                update_b = max(out_b // 8, 1)
+                        elif self.roots.get(sub) == "dynamic-slice":
+                            update_b = out_b
+                if op == "dynamic-slice":
+                    tb = 2 * out_b       # read region + write out
+                elif update_b is not None:
+                    # buffer-aliased in-place update: touch ~3 slices
+                    # (read src slice, write dest slice, index plumbing)
+                    tb = 3 * update_b
+                else:
+                    tb = out_b + in_b
+                self.traffic += mult * tb
+                if self.detail is not None and tb * mult > 0:
+                    m2 = re.search(r'op_name="([^"]*)"', ins.rest)
+                    key = (op, (m2.group(1)[:100] if m2 else "?"),
+                           ins.type_str[:44])
+                    self.detail[key] += mult * tb
+
+    # ------------------------------------------------------------------
+    def summary(self) -> dict:
+        wire = (2 * 0 + sum(self.coll.values()))  # already weighted
+        return {
+            "flops": self.flops,
+            "traffic_bytes": self.traffic,
+            "collective_bytes": sum(self.coll.values()),
+            "collective_detail": dict(self.coll),
+            "collective_ops": self.coll_count,
+        }
+
+
+def analyze(text: str) -> dict:
+    return HloCost(text).summary()

@@ -1,0 +1,20 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single-pod: 16x16 = 256 chips (v5e pod);
+multi-pod: 2 pods = 512 chips with a leading "pod" axis (DCN).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over host devices (tests/examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,48 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id>``."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.base import ARCHS, get_arch
+from repro.models import transformer as tfm
+from repro.serve.engine import Request, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--reduced", action="store_true", default=None)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    args = ap.parse_args(argv)
+
+    reduced = args.reduced
+    if reduced is None:
+        reduced = jax.default_backend() == "cpu"
+    cfg = get_arch(args.arch)
+    if reduced:
+        cfg = cfg.reduced()
+    params = tfm.init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, batch_size=args.batch_size,
+                      max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(
+                        0, cfg.vocab,
+                        (int(rng.integers(4, 32)),)).astype(np.int32),
+                    max_new_tokens=args.max_new_tokens)
+            for i in range(args.requests)]
+    results = eng.run(reqs)
+    total = sum(len(r.tokens) for r in results)
+    print(f"arch={args.arch} reduced={reduced}: served {len(reqs)} "
+          f"requests, {total} tokens")
+
+
+if __name__ == "__main__":
+    main()

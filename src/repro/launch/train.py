@@ -1,0 +1,56 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id>``.
+
+On real hardware this runs the full config on the production mesh; on a
+CPU host pass ``--reduced`` (default there) to smoke-train the same
+architecture at reduced width.  Mesh axes come from the runtime device
+count; the checkpoint/restart path is identical in both modes.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import ARCHS, get_arch
+from repro.data.pipeline import make_source, SyntheticLM
+from repro.optim import adamw
+from repro.train import loop as train_loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true", default=None,
+                    help="reduced-width config (default on CPU)")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    args = ap.parse_args(argv)
+
+    reduced = args.reduced
+    if reduced is None:
+        reduced = jax.default_backend() == "cpu"
+    cfg = get_arch(args.arch)
+    if reduced:
+        cfg = cfg.reduced()
+    src = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch, seed=0,
+                      frontend=cfg.frontend, n_patches=cfg.n_patches,
+                      frontend_dim=cfg.frontend_dim, enc_seq=cfg.enc_seq)
+    opt = adamw.OptConfig(lr=args.lr, warmup_steps=min(20, args.steps),
+                          total_steps=args.steps)
+    lp = train_loop.LoopConfig(total_steps=args.steps,
+                               ckpt_every=args.ckpt_every,
+                               ckpt_dir=args.ckpt_dir, log_every=10)
+    out = train_loop.run(cfg, lp, opt, src, key=jax.random.key(0))
+    print(f"done: arch={args.arch} reduced={reduced} "
+          f"resumed={out['resumed']} final_loss={out['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,303 @@
+"""Transformer building blocks: norms, RoPE, GQA flash attention, MLPs.
+
+Attention is a *doubly-chunked online-softmax* implementation (pure JAX):
+an unrolled loop over query blocks with an inner ``lax.scan`` over KV
+blocks, carrying (m, l, acc).  This bounds live memory to one
+[block_q × block_kv] score tile per head regardless of sequence length —
+the same blocking the Pallas TPU kernel (kernels/flash_attention.py) uses,
+so the dry-run lowering reflects the kernel's memory behaviour.  Causal
+masking is block-exact: query block i only scans KV blocks 0..i, so the
+compiled FLOPs match the triangular work (no 2× waste).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, w, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * \
+        w.astype(x.dtype)
+
+
+def layernorm(x, w, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y.astype(x.dtype) * w.astype(x.dtype)
+    return y + b.astype(x.dtype) if b is not None else y
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["w"])
+    return layernorm(x, p["w"], p.get("b"))
+
+
+def init_norm(cfg, d):
+    p = {"w": jnp.ones((d,), jnp.dtype(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        p["b"] = jnp.zeros((d,), jnp.dtype(cfg.param_dtype))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x, pos, theta: float):
+    """x: [B, S, H, hd], pos: [B, S] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs     # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (pure JAX, chunked)
+# ---------------------------------------------------------------------------
+def flash_attention(q, k, v, *, causal: bool, q_block: int = 512,
+                    kv_block: int = 1024, q_offset=0, kv_len=None):
+    """Online-softmax attention.
+
+    q: [B, Sq, H, hd]; k, v: [B, Skv, Hkv, hd] with H % Hkv == 0.
+    q_offset: absolute position of q[0] (decode: cache length so far).
+    kv_len:   number of valid cache entries (decode with a preallocated
+              cache); None means all Skv are valid.
+    Returns [B, Sq, H, hd] in q.dtype; accumulation in f32.
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    pad_q = (-Sq) % q_block
+    pad_kv = (-Skv) % kv_block
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    Sq_p, Skv_p = Sq + pad_q, Skv + pad_kv
+    n_q, n_kv = Sq_p // q_block, Skv_p // kv_block
+    if kv_len is None:
+        kv_valid = jnp.asarray(Skv, jnp.int32)
+    else:
+        kv_valid = jnp.asarray(kv_len, jnp.int32)
+
+    # [B, Sq, Hkv, G, hd] -> blocks
+    qb = q.reshape(B, n_q, q_block, Hkv, G, hd)
+    kb = k.reshape(B, n_kv, kv_block, Hkv, hd)
+    vb = v.reshape(B, n_kv, kv_block, Hkv, hd)
+    kpos = jnp.arange(Skv_p, dtype=jnp.int32).reshape(n_kv, kv_block)
+
+    outs = []
+    for i in range(n_q):                      # unrolled: static shapes
+        qi = qb[:, i].astype(jnp.float32) * scale    # [B,bq,Hkv,G,hd]
+        qpos = q_offset + i * q_block + jnp.arange(q_block)
+        if causal and isinstance(q_offset, int):
+            # block-exact causal: KV block j needed iff it can contain a
+            # position <= the last q position of this q block
+            hi = min(n_kv, (q_offset + (i + 1) * q_block - 1) // kv_block + 1)
+        else:
+            hi = n_kv  # dynamic offset (decode): keep all, rely on mask
+
+        def step(carry, inp):
+            m, l, acc = carry
+            kj, vj, kpj = inp
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kj.astype(jnp.float32))
+            mask = kpj[None, :] < kv_valid
+            if causal:
+                mask = mask & (qpos[:, None] >= kpj[None, :])
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vj.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, G, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (kb[:, :hi].swapaxes(0, 1), vb[:, :hi].swapaxes(0, 1),
+             kpos[:hi]))
+        l = jnp.where(l == 0, 1.0, l)        # fully-masked rows (padding)
+        o = (acc / l[..., None]).astype(q.dtype)   # [B,Hkv,G,bq,hd]
+        outs.append(o.transpose(0, 3, 1, 2, 4).reshape(B, q_block, H, hd))
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out[:, :Sq]
+
+
+def naive_attention(q, k, v, *, causal: bool, q_offset=0, kv_len=None):
+    """Reference (materializes full scores) — oracle for tests."""
+    B, Sq, H, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    qr = q.reshape(B, Sq, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr,
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    kpos = jnp.arange(Skv)
+    qpos = q_offset + jnp.arange(Sq)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if kv_len is not None:
+        mask &= (kpos < kv_len)[None, :]
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + cache handling)
+# ---------------------------------------------------------------------------
+def init_attn(cfg, key, d=None):
+    d = d or cfg.d_model
+    hd, H, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    pdt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    std = d ** -0.5
+    p = {}
+    if cfg.fused_qkv:
+        p["wqkv"] = (jax.random.normal(k1, (d, (H + 2 * Hkv) * hd)) *
+                     std).astype(pdt)
+        if cfg.qkv_bias:
+            p["bqkv"] = jnp.zeros(((H + 2 * Hkv) * hd,), pdt)
+    else:
+        kq, kk, kv = jax.random.split(k1, 3)
+        p["wq"] = (jax.random.normal(kq, (d, H * hd)) * std).astype(pdt)
+        p["wk"] = (jax.random.normal(kk, (d, Hkv * hd)) * std).astype(pdt)
+        p["wv"] = (jax.random.normal(kv, (d, Hkv * hd)) * std).astype(pdt)
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((H * hd,), pdt)
+            p["bk"] = jnp.zeros((Hkv * hd,), pdt)
+            p["bv"] = jnp.zeros((Hkv * hd,), pdt)
+    p["wo"] = (jax.random.normal(k2, (H * hd, d)) *
+               (H * hd) ** -0.5).astype(pdt)
+    if cfg.attn_out_bias:
+        p["bo"] = jnp.zeros((d,), pdt)
+    return p
+
+
+def qkv_proj(cfg, p, x):
+    B, S, d = x.shape
+    hd, H, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    if cfg.fused_qkv:
+        qkv = x @ p["wqkv"].astype(x.dtype)
+        if "bqkv" in p:
+            qkv = qkv + p["bqkv"].astype(x.dtype)
+        q, k, v = jnp.split(qkv, [H * hd, (H + Hkv) * hd], axis=-1)
+    else:
+        q = x @ p["wq"].astype(x.dtype)
+        k = x @ p["wk"].astype(x.dtype)
+        v = x @ p["wv"].astype(x.dtype)
+        if "bq" in p:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, S, H, hd), k.reshape(B, S, Hkv, hd),
+            v.reshape(B, S, Hkv, hd))
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # [B, S_max, Hkv, hd]
+    v: jax.Array
+    length: jax.Array  # [] int32 — valid entries
+
+
+def _attn_constraint(cfg, q, k, v):
+    """Optional sequence-parallel attention: shard q's sequence dim over
+    the model axis (kv replicated over model) — used when head counts
+    don't divide the mesh (e.g. starcoder2's 36 heads on a 16-way axis).
+    """
+    if cfg.attn_partition != "seq" or not cfg.mesh_axes:
+        return q, k, v
+    from jax.sharding import PartitionSpec as P
+    data = tuple(a for a in cfg.mesh_axes if a != "model")
+    d = data if len(data) > 1 else data[0]
+    wsc = jax.lax.with_sharding_constraint
+    q = wsc(q, P(d, "model", None, None))
+    k = wsc(k, P(d, None, None, None))
+    v = wsc(v, P(d, None, None, None))
+    return q, k, v
+
+
+def attn_block(cfg, p, x, pos, *, causal=True, cache: KVCache | None = None):
+    """Self-attention with optional decode cache.
+
+    cache: decode mode — append k/v at cache.length, attend over cache.
+    """
+    B, S, _ = x.shape
+    q, k, v = qkv_proj(cfg, p, x)
+    if cfg.rope:
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    if cache is None:
+        q, k, v = _attn_constraint(cfg, q, k, v)
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+        new_len = cache.length + S
+        o = flash_attention(q, ck, cv, causal=causal,
+                            q_block=cfg.attn_q_block,
+                            kv_block=cfg.attn_kv_block,
+                            q_offset=cache.length, kv_len=new_len)
+        new_cache = KVCache(ck, cv, new_len)
+    else:
+        o = flash_attention(q, k, v, causal=causal,
+                            q_block=cfg.attn_q_block,
+                            kv_block=cfg.attn_kv_block)
+        new_cache = None
+    o = o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+    if "bo" in p:
+        o = o + p["bo"].astype(x.dtype)
+    return o, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def init_mlp(cfg, key, d=None, ff=None):
+    d, ff = d or cfg.d_model, ff or cfg.d_ff
+    pdt = jnp.dtype(cfg.param_dtype)
+    if cfg.act == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"w1": (jax.random.normal(k1, (d, ff)) * d**-0.5).astype(pdt),
+                "w3": (jax.random.normal(k3, (d, ff)) * d**-0.5).astype(pdt),
+                "w2": (jax.random.normal(k2, (ff, d)) * ff**-0.5).astype(pdt)}
+    k1, k2 = jax.random.split(key)
+    return {"fc1": (jax.random.normal(k1, (d, ff)) * d**-0.5).astype(pdt),
+            "b1": jnp.zeros((ff,), pdt),
+            "fc2": (jax.random.normal(k2, (ff, d)) * ff**-0.5).astype(pdt),
+            "b2": jnp.zeros((d,), pdt)}
+
+
+def mlp_block(cfg, p, x):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w1"].astype(x.dtype)) * \
+            (x @ p["w3"].astype(x.dtype))
+        return h @ p["w2"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["fc1"].astype(x.dtype) + p["b1"].astype(x.dtype))
+    return h @ p["fc2"].astype(x.dtype) + p["b2"].astype(x.dtype)

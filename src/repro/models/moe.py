@@ -1,0 +1,107 @@
+"""Mixture-of-Experts layer (GShard-style capacity dispatch).
+
+Routing is the paper's conditional dataflow made tensor-scale: the router
+is a `branch` operator fanning tokens out to expert sub-fabrics and a
+`dmerge` combining them back (DESIGN.md §5).
+
+Implementation: top-k routing with capacity C = ceil(k·S_g/E · cf) over
+*groups* of S_g tokens (``cfg.moe_group_size``).  The dispatch/combine
+tensors are [G, S_g, E, C]; their size is k·S_g² *independent of E*, so
+group size — not expert count — controls the memory knee.  Groups shard
+over the data axis, experts over the model axis (EP); the token exchange
+lowers to all-to-all on a (data × model) mesh.
+
+Tokens over capacity are dropped (standard Switch/GShard semantics);
+aux load-balancing loss returned alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_moe(cfg, key):
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E)) * d**-0.5).astype(pdt),
+        "w1": (jax.random.normal(ks[1], (E, d, ff)) * d**-0.5).astype(pdt),
+        "w3": (jax.random.normal(ks[2], (E, d, ff)) * d**-0.5).astype(pdt),
+        "w2": (jax.random.normal(ks[3], (E, ff, d)) * ff**-0.5).astype(pdt),
+    }
+    if cfg.shared_expert:
+        from repro.models.layers import init_mlp
+        p["shared"] = init_mlp(cfg, ks[4], d=d, ff=ff)
+    return p
+
+
+def moe_block(cfg, p, x):
+    """x: [B, S, d] -> (y, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    Sg = min(cfg.moe_group_size, B * S)
+    T = B * S
+    assert T % Sg == 0, (T, Sg)
+    G = T // Sg
+    xg = x.reshape(G, Sg, d)
+
+    logits = (xg.astype(jnp.float32) @
+              p["router"].astype(jnp.float32))          # [G,Sg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)            # [G,Sg,k]
+    gate_vals = gate_vals / jnp.clip(
+        gate_vals.sum(-1, keepdims=True), 1e-9)         # renormalize top-k
+
+    C = int(np.ceil(k * Sg / E * cfg.capacity_factor))
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # [G,Sg,k,E]
+    # position of each (token, slot) within its expert's queue
+    pos = jnp.cumsum(onehot.reshape(G, Sg * k, E), axis=1) \
+        .reshape(G, Sg, k, E) - onehot                  # [G,Sg,k,E]
+    keep = (pos < C) & (onehot > 0)
+    pos_c = jnp.einsum("gske,gske->gsk", pos, onehot).astype(jnp.int32)
+    pos_oh = jax.nn.one_hot(pos_c, C, dtype=jnp.float32)  # [G,Sg,k,C]
+    keep_f = keep.astype(jnp.float32)                     # [G,Sg,k,E]
+    dispatch = jnp.einsum("gske,gskc->gsec", keep_f, pos_oh)
+    combine = jnp.einsum("gske,gsk,gskc->gsec", keep_f, gate_vals, pos_oh)
+
+    def _constrain(t):
+        """moe_partition="tokens": pin expert activations to (expert ->
+        model, token-group -> data).  Forces XLA to all-gather the (small)
+        FSDP weight shards per layer instead of all-reducing the (huge)
+        expert activations over the data axis — see EXPERIMENTS.md §Perf
+        H3."""
+        if getattr(cfg, "moe_partition", "auto") != "tokens" or \
+                not cfg.mesh_axes:
+            return t
+        from jax.sharding import PartitionSpec as P
+        data = tuple(a for a in cfg.mesh_axes if a != "model")
+        d_ax = data if len(data) > 1 else data[0]
+        return jax.lax.with_sharding_constraint(
+            t, P("model", d_ax, *([None] * (t.ndim - 2))))
+
+    cdt = x.dtype
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch.astype(cdt), xg)  # [E,G,C,d]
+    xe = _constrain(xe)
+    h = jnp.einsum("egcd,edf->egcf", xe, p["w1"].astype(cdt))
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("egcd,edf->egcf", xe,
+                                        p["w3"].astype(cdt))
+    else:
+        h = jax.nn.gelu(h)
+    h = _constrain(h)
+    ye = jnp.einsum("egcf,efd->egcd", h, p["w2"].astype(cdt))
+    ye = _constrain(ye)
+    y = jnp.einsum("egcd,gsec->gsd", ye, combine.astype(cdt))
+
+    if cfg.shared_expert:
+        from repro.models.layers import mlp_block
+        y = y + mlp_block(cfg, {kk: v for kk, v in p["shared"].items()},
+                          xg)
+
+    # Switch aux loss: E * sum_e fraction_tokens_e * mean_prob_e
+    frac = jnp.mean(onehot[:, :, 0, :], axis=(0, 1))    # top-1 assignment
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_prob)
+    return y.reshape(B, S, d), aux

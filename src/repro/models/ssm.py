@@ -1,0 +1,316 @@
+"""Sub-quadratic sequence mixers: Mamba2 (SSD) and RWKV6 ("Finch").
+
+Both are *chunked* scans: intra-chunk work is a masked matmul against a
+decay matrix whose exponents are differences of cumulative log-decays and
+therefore always <= 0 (no overflow by construction); inter-chunk state is
+carried by a ``lax.scan`` over chunks.  This is the TPU-native adaptation
+of the recurrence — per-token scans would serialize the MXU and make the
+backward pass store O(seq) states.
+
+Recurrent decode (`*_step`) updates O(1) state per token — this is what
+makes ``long_500k`` runnable for zamba2/rwkv6 while pure-attention archs
+skip it.
+
+Mamba2 here follows the SSD scalar-decay-per-head form (A is scalar per
+head), single B/C group.  RWKV6 has data-dependent *per-channel* decay via
+the low-rank ("lora") path of the paper arXiv:2404.05892.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+CONV_K = 4
+
+
+def mamba2_dims(cfg):
+    d_in = 2 * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * N
+    return d_in, H, N, conv_dim
+
+
+def init_mamba2(cfg, key):
+    d = cfg.d_model
+    d_in, H, N, conv_dim = mamba2_dims(cfg)
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * d_in + 2 * N + H)) *
+                    d**-0.5).astype(pdt),
+        "conv_w": (jax.random.normal(ks[1], (conv_dim, CONV_K)) *
+                   CONV_K**-0.5).astype(pdt),
+        "conv_b": jnp.zeros((conv_dim,), pdt),
+        "A_log": jnp.zeros((H,), pdt),          # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), pdt),
+        "dt_bias": jnp.zeros((H,), pdt),
+        "norm_w": jnp.ones((d_in,), pdt),
+        "out_proj": (jax.random.normal(ks[3], (d_in, d)) *
+                     d_in**-0.5).astype(pdt),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv, kernel CONV_K. x: [B,S,C]; state: [B,K-1,C]."""
+    B, S, C = x.shape
+    if state is None:
+        pad = jnp.zeros((B, CONV_K - 1, C), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)           # [B, S+K-1, C]
+    out = sum(xp[:, i:i + S] * w[:, i].astype(x.dtype)
+              for i in range(CONV_K))
+    new_state = xp[:, -(CONV_K - 1):]
+    return out + b.astype(x.dtype), new_state
+
+
+def _ssm_constrain(cfg, t, spec_tail):
+    """ssm_partition="tokens": pin batch->data, heads/channels->model.
+    Without this the SPMD solver replicates the (large) mamba
+    intermediates over the data axis — see EXPERIMENTS.md §Perf H2."""
+    if getattr(cfg, "ssm_partition", "auto") != "tokens" or \
+            not cfg.mesh_axes:
+        return t
+    from jax.sharding import PartitionSpec as P
+    data = tuple(a for a in cfg.mesh_axes if a != "model")
+    d_ax = data if len(data) > 1 else data[0]
+    return jax.lax.with_sharding_constraint(t, P(d_ax, *spec_tail))
+
+
+def _mamba_project(cfg, p, x):
+    d_in, H, N, _ = mamba2_dims(cfg)
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xc, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    # batch -> data everywhere; wide channel dims -> model; the tiny
+    # B/C state channels (N) replicate over model
+    z = _ssm_constrain(cfg, z, (None, "model"))
+    xc = _ssm_constrain(cfg, xc, (None, "model"))
+    Bm = _ssm_constrain(cfg, Bm, (None, None))
+    Cm = _ssm_constrain(cfg, Cm, (None, None))
+    dt = _ssm_constrain(cfg, dt, (None, "model"))
+    return z, xc, Bm, Cm, dt
+
+
+def mamba2_block(cfg, p, x, chunk: int | None = None):
+    """Training/prefill forward. x: [B,S,d] -> y [B,S,d]."""
+    chunk = chunk or getattr(cfg, "ssm_chunk", 256)
+    B, S, d = x.shape
+    d_in, H, N, conv_dim = mamba2_dims(cfg)
+    P = cfg.ssm_head_dim
+    z, xc, Bm, Cm, dt = _mamba_project(cfg, p, x)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))   # [B,S,H]
+    loga = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt     # [B,S,H] <= 0
+    xh = xc.reshape(B, S, H, P).astype(jnp.float32)
+    xh = _ssm_constrain(cfg, xh, (None, "model", None))
+    xdt = xh * dt[..., None]
+    Bm32, Cm32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    def chunk_step(h, inp):
+        xdt_c, b_c, c_c, la_c = inp      # [B,Q,H,P], [B,Q,N], ..., [B,Q,H]
+        l = jnp.cumsum(la_c, axis=1)                       # [B,Q,H]
+        # intra: L[t,s] = exp(l_t - l_s + la_s?)  -- define h_t = a_t h_{t-1}
+        # + B_t xdt_t, y_t = C_t h_t: token s contributes decay
+        # prod_{j=s+1..t} a_j = exp(l_t - l_s)
+        Lmat = jnp.exp(l[:, :, None, :] - l[:, None, :, :])   # [B,Q,Q,H]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        Lmat = jnp.where(mask[None, :, :, None], Lmat, 0.0)
+        cb = jnp.einsum("bqn,bsn->bqs", c_c, b_c)
+        y = jnp.einsum("bqs,bqsh,bshp->bqhp", cb, Lmat, xdt_c)
+        # inter: contribution of carried state
+        y = y + jnp.einsum("bqn,bhpn->bqhp", c_c, h) * \
+            jnp.exp(l)[..., None]
+        # state update
+        decay_out = jnp.exp(l[:, -1:, :] - l)              # [B,Q,H]
+        h_new = h * jnp.exp(l[:, -1])[..., None, None] + \
+            jnp.einsum("bsh,bshp,bsn->bhpn", decay_out, xdt_c, b_c)
+        return h_new, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xdt_c = xdt.reshape(B, nc, Q, H, P).swapaxes(0, 1)
+    b_c = Bm32.reshape(B, nc, Q, N).swapaxes(0, 1)
+    c_c = Cm32.reshape(B, nc, Q, N).swapaxes(0, 1)
+    la_c = loga.reshape(B, nc, Q, H).swapaxes(0, 1)
+    _, ys = jax.lax.scan(chunk_step, h0, (xdt_c, b_c, c_c, la_c))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, P)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba2_init_state(cfg, batch, dtype=jnp.float32):
+    d_in, H, N, conv_dim = mamba2_dims(cfg)
+    return {"h": jnp.zeros((batch, H, cfg.ssm_head_dim, N), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_K - 1, conv_dim), dtype)}
+
+
+def mamba2_step(cfg, p, x, state):
+    """Single-token decode. x: [B,1,d] -> (y [B,1,d], new state)."""
+    B, S, d = x.shape
+    assert S == 1
+    d_in, H, N, _ = mamba2_dims(cfg)
+    P = cfg.ssm_head_dim
+    z, xc, Bm, Cm, dt = _mamba_project(cfg, p, x)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                        state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))[:, 0]   # [B,H]
+    a = jnp.exp(-jnp.exp(p["A_log"].astype(jnp.float32)) * dt)     # [B,H]
+    xh = xc.reshape(B, H, P).astype(jnp.float32)
+    h = state["h"] * a[..., None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xh, Bm[:, 0].astype(jnp.float32), dt)
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["out_proj"].astype(x.dtype), \
+        {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+LORA_R = 64
+
+
+def rwkv6_dims(cfg):
+    d = cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d // P
+    return d, H, P
+
+
+def init_rwkv6(cfg, key):
+    d, H, P = rwkv6_dims(cfg)
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 10)
+    std = d**-0.5
+    return {
+        # time-mix token-shift lerp coefficients for r,k,v,g,w
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5).astype(pdt),
+        "Wr": (jax.random.normal(ks[1], (d, d)) * std).astype(pdt),
+        "Wk": (jax.random.normal(ks[2], (d, d)) * std).astype(pdt),
+        "Wv": (jax.random.normal(ks[3], (d, d)) * std).astype(pdt),
+        "Wg": (jax.random.normal(ks[4], (d, d)) * std).astype(pdt),
+        "Wo": (jax.random.normal(ks[5], (d, d)) * std).astype(pdt),
+        "w0": jnp.full((d,), -2.0, pdt),
+        "wA": (jax.random.normal(ks[6], (d, LORA_R)) * std).astype(pdt),
+        "wB": (jax.random.normal(ks[7], (LORA_R, d)) *
+               LORA_R**-0.5).astype(pdt),
+        "u": (jax.random.normal(ks[8], (H, P)) * 0.1).astype(pdt),
+        "ln_w": jnp.ones((d,), pdt),   # per-head groupnorm approximated
+        # channel-mix
+        "mu_cm": (jax.random.uniform(ks[9], (2, d)) * 0.5).astype(pdt),
+        "Wk_cm": (jax.random.normal(ks[0], (d, cfg.d_ff)) * std).astype(pdt),
+        "Wv_cm": (jax.random.normal(ks[1], (cfg.d_ff, d)) *
+                  cfg.d_ff**-0.5).astype(pdt),
+        "Wr_cm": (jax.random.normal(ks[2], (d, d)) * std).astype(pdt),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / carried last token at t=0)."""
+    B, S, d = x.shape
+    first = jnp.zeros((B, 1, d), x.dtype) if last is None else \
+        last.astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1) if S > 1 else first
+
+
+def _rwkv_proj(cfg, p, x, xs):
+    d, H, P = rwkv6_dims(cfg)
+    B, S, _ = x.shape
+    mu = p["mu"].astype(x.dtype)
+    mix = [x + mu[i] * (xs - x) for i in range(5)]
+    r = (mix[0] @ p["Wr"].astype(x.dtype)).reshape(B, S, H, P)
+    k = (mix[1] @ p["Wk"].astype(x.dtype)).reshape(B, S, H, P)
+    v = (mix[2] @ p["Wv"].astype(x.dtype)).reshape(B, S, H, P)
+    g = jax.nn.silu(mix[3] @ p["Wg"].astype(x.dtype))
+    ww = p["w0"].astype(jnp.float32) + \
+        (jnp.tanh(mix[4].astype(jnp.float32) @ p["wA"].astype(jnp.float32))
+         @ p["wB"].astype(jnp.float32))
+    logw = -jnp.exp(ww).reshape(B, S, H, P)    # <= 0, data-dependent decay
+    return r, k, v, g, logw
+
+
+def rwkv6_timemix(cfg, p, x, state=None, chunk: int = 32):
+    """x: [B,S,d] -> (y, new_state). state: {"S": [B,H,P,P], "x_tm": ...}"""
+    d, H, P = rwkv6_dims(cfg)
+    B, S, _ = x.shape
+    xs = _shift(x, None if state is None else state.get("x_tm"))
+    r, k, v, g, logw = _rwkv_proj(cfg, p, x, xs)
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    u = p["u"].astype(jnp.float32)
+
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    def chunk_step(Sst, inp):
+        r_c, k_c, v_c, lw_c = inp     # [B,Q,H,P] each
+        dcum = jnp.cumsum(lw_c, axis=1)                  # [B,Q,H,P]
+        dprev = dcum - lw_c                              # cumsum up to t-1
+        # intra-chunk: score[t,s] = sum_p r_t k_s exp(dprev_t - dcum_s), s<t
+        Ld = jnp.exp(dprev[:, :, None] - dcum[:, None])  # [B,Q,Q,H,P] <=0 ok
+        mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+        Ld = jnp.where(mask[None, :, :, None, None], Ld, 0.0)
+        score = jnp.einsum("bqhp,bshp,bqshp->bqsh", r_c, k_c, Ld)
+        y = jnp.einsum("bqsh,bshp->bqhp", score, v_c)
+        # diagonal (current token) bonus term
+        diag = jnp.einsum("bqhp,hp,bqhp->bqh", r_c, u, k_c)
+        y = y + diag[..., None] * v_c
+        # inter-chunk: carried state
+        y = y + jnp.einsum("bqhp,bhpv->bqhv", r_c * jnp.exp(dprev), Sst)
+        # state update: S' = exp(dlast) * S + sum_s exp(dlast - dcum_s) k v
+        dlast = dcum[:, -1]                              # [B,H,P]
+        Snew = Sst * jnp.exp(dlast)[..., None] + jnp.einsum(
+            "bshp,bshv->bhpv", k_c * jnp.exp(dlast[:, None] - dcum), v_c)
+        return Snew, y
+
+    S0 = jnp.zeros((B, H, P, P), jnp.float32) if state is None \
+        else state["S"]
+    rc = r32.reshape(B, nc, Q, H, P).swapaxes(0, 1)
+    kc = k32.reshape(B, nc, Q, H, P).swapaxes(0, 1)
+    vc = v32.reshape(B, nc, Q, H, P).swapaxes(0, 1)
+    lc = logw.reshape(B, nc, Q, H, P).swapaxes(0, 1)
+    Sfin, ys = jax.lax.scan(chunk_step, S0, (rc, kc, vc, lc))
+    y = ys.swapaxes(0, 1).reshape(B, S, d)
+    # per-head "groupnorm" (rmsnorm over head dim), then gate + out proj
+    y = y.reshape(B, S, H, P)
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-5)
+    y = (y.reshape(B, S, d) * p["ln_w"].astype(jnp.float32))
+    y = (y.astype(x.dtype) * g) @ p["Wo"].astype(x.dtype)
+    new_state = {"S": Sfin, "x_tm": x[:, -1:]}
+    return y, new_state
+
+
+def rwkv6_channelmix(cfg, p, x, state=None):
+    mu = p["mu_cm"].astype(x.dtype)
+    xs = _shift(x, None if state is None else state.get("x_cm"))
+    xk = x + mu[0] * (xs - x)
+    xr = x + mu[1] * (xs - x)
+    kk = jnp.square(jax.nn.relu(xk @ p["Wk_cm"].astype(x.dtype)))
+    y = jax.nn.sigmoid(xr @ p["Wr_cm"].astype(x.dtype)) * \
+        (kk @ p["Wv_cm"].astype(x.dtype))
+    return y, {"x_cm": x[:, -1:]}

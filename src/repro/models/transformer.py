@@ -1,0 +1,684 @@
+"""Model zoo: one composable LM covering all assigned families.
+
+Families:
+  dense   — pre-norm transformer (GQA + MLP), scan-over-layers
+  moe     — dense attention + MoE FFN (leading dense layers supported)
+  hybrid  — zamba2: Mamba2 backbone + ONE weight-shared attention block
+            applied every `attn_every` layers
+  ssm     — rwkv6: attention-free time-mix/channel-mix
+  vlm     — dense backbone; stub patch frontend (precomputed patch
+            embeddings projected & spliced over the first n_patches slots)
+  audio   — whisper: encoder (stub frame embeddings) + decoder with
+            cross-attention
+
+All layer stacks are ``lax.scan`` over stacked parameters (compile-time
+O(1) in depth) with optional per-layer remat.  The model is also exposed
+as a coarse dataflow graph for the pipeline scheduler (see
+repro/core/pipeline.py): embed -> layer* -> norm -> head are the operator
+nodes, activations are the tokens.
+
+The training loss is *chunked-vocab* cross-entropy: logits are produced
+seq-chunk by seq-chunk inside a scan so the [B,S,V] tensor is never live
+(a beyond-paper memory optimization; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import ssm
+from repro.models.layers import (KVCache, apply_norm, attn_block,
+                                 flash_attention, init_attn, init_mlp,
+                                 init_norm, mlp_block, qkv_proj, rope)
+from repro.models.moe import init_moe, moe_block
+
+Params = Any
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(cfg: ArchConfig, key) -> Params:
+    pdt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.n_layers + cfg.n_enc_layers + 8)
+    p: dict = {}
+    p["embed"] = (jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model))
+                  * 0.02).astype(pdt)
+    if not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab))
+                     * cfg.d_model**-0.5).astype(pdt)
+    p["final_norm"] = init_norm(cfg, cfg.d_model)
+    if cfg.frontend == "patches":
+        p["patch_proj"] = (jax.random.normal(
+            keys[-3], (cfg.frontend_dim, cfg.d_model)) *
+            cfg.frontend_dim**-0.5).astype(pdt)
+    if cfg.frontend == "frames":
+        p["frame_proj"] = (jax.random.normal(
+            keys[-3], (cfg.frontend_dim, cfg.d_model)) *
+            cfg.frontend_dim**-0.5).astype(pdt)
+
+    def dense_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": init_norm(cfg, cfg.d_model),
+                "attn": init_attn(cfg, k1),
+                "ln2": init_norm(cfg, cfg.d_model),
+                "mlp": init_mlp(cfg, k2)}
+
+    def moe_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": init_norm(cfg, cfg.d_model),
+                "attn": init_attn(cfg, k1),
+                "ln2": init_norm(cfg, cfg.d_model),
+                "moe": init_moe(cfg, k2)}
+
+    if cfg.rwkv:
+        p["layers"] = _stack([
+            {"ln1": init_norm(cfg, cfg.d_model),
+             "tm": ssm.init_rwkv6(cfg, keys[i]),
+             "ln2": init_norm(cfg, cfg.d_model)}
+            for i in range(cfg.n_layers)])
+    elif cfg.family == "hybrid":
+        p["layers"] = _stack([
+            {"ln": init_norm(cfg, cfg.d_model),
+             "mamba": ssm.init_mamba2(cfg, keys[i])}
+            for i in range(cfg.n_layers)])
+        p["shared"] = dense_layer(keys[cfg.n_layers])  # ONE shared block
+    elif cfg.n_experts:
+        nd = cfg.n_dense_layers
+        if nd:
+            p["dense_layers"] = _stack(
+                [dense_layer(keys[i]) for i in range(nd)])
+        p["layers"] = _stack(
+            [moe_layer(keys[nd + i]) for i in range(cfg.n_layers - nd)])
+    else:
+        p["layers"] = _stack(
+            [dense_layer(keys[i]) for i in range(cfg.n_layers)])
+
+    if cfg.enc_dec:
+        p["enc_layers"] = _stack(
+            [dense_layer(keys[cfg.n_layers + i])
+             for i in range(cfg.n_enc_layers)])
+        p["enc_norm"] = init_norm(cfg, cfg.d_model)
+        # decoder cross-attention (per decoder layer)
+        def xattn(k):
+            q = init_attn(dataclasses.replace(cfg, fused_qkv=False), k)
+            return {"ln": init_norm(cfg, cfg.d_model), **q}
+        p["xattn"] = _stack(
+            [xattn(keys[cfg.n_layers + cfg.n_enc_layers - 1 - i])
+             for i in range(cfg.n_layers)])
+    return p
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(params)))
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+def _dense_body(cfg, lp, x, pos, cache=None, causal=True):
+    a, new_cache = attn_block(cfg, lp["attn"], apply_norm(cfg, lp["ln1"], x),
+                              pos, causal=causal, cache=cache)
+    x = x + a
+    x = x + mlp_block(cfg, lp["mlp"], apply_norm(cfg, lp["ln2"], x))
+    return x, new_cache
+
+
+def _moe_body(cfg, lp, x, pos, cache=None):
+    a, new_cache = attn_block(cfg, lp["attn"], apply_norm(cfg, lp["ln1"], x),
+                              pos, causal=True, cache=cache)
+    x = x + a
+    y, aux = moe_block(cfg, lp["moe"], apply_norm(cfg, lp["ln2"], x))
+    return x + y, aux, new_cache
+
+
+def _rwkv_body(cfg, lp, x, state=None):
+    y, st_tm = ssm.rwkv6_timemix(cfg, lp["tm"],
+                                 apply_norm(cfg, lp["ln1"], x),
+                                 state=state)
+    x = x + y
+    y, st_cm = ssm.rwkv6_channelmix(cfg, lp["tm"],
+                                    apply_norm(cfg, lp["ln2"], x),
+                                    state=state)
+    x = x + y
+    return x, {**st_tm, **st_cm}
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill without cache)
+# ---------------------------------------------------------------------------
+def embed_inputs(cfg, params, batch):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(cdt)
+    if cfg.frontend == "patches":
+        pe = batch["patches"].astype(cdt) @ params["patch_proj"].astype(cdt)
+        B = x.shape[0]
+        npatch = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, npatch:]], axis=1)
+    return x
+
+
+def _sinusoid(S, d, dtype):
+    pos = np.arange(S)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    pe = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(pe, dtype)
+
+
+def encode(cfg, params, frames):
+    """Whisper encoder on stub frame embeddings [B, S_enc, frontend_dim]."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(cdt) @ params["frame_proj"].astype(cdt)
+    x = x + _sinusoid(x.shape[1], cfg.d_model, cdt)[None]
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(x, lp):
+        x, _ = _dense_body(cfg, lp, x, pos, causal=False)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def _xattn_body(cfg, lp, x, enc_kv):
+    """Cross-attention: q from x, k/v precomputed from encoder output."""
+    B, S, _ = x.shape
+    hd, H = cfg.head_dim, cfg.n_heads
+    h = apply_norm(cfg, lp["ln"], x)
+    q = (h @ lp["wq"].astype(x.dtype)).reshape(B, S, H, hd)
+    o = flash_attention(q, enc_kv[0], enc_kv[1], causal=False,
+                        q_block=cfg.attn_q_block,
+                        kv_block=cfg.attn_kv_block)
+    return x + o.reshape(B, S, -1) @ lp["wo"].astype(x.dtype)
+
+
+def cross_kv(cfg, xp, enc_out):
+    """Precompute per-layer cross k/v: xp is the stacked xattn params."""
+    B, S, _ = enc_out.shape
+    hd, Hkv = cfg.head_dim, cfg.n_kv_heads
+
+    def one(lp):
+        k = (enc_out @ lp["wk"].astype(enc_out.dtype)).reshape(
+            B, S, Hkv, hd)
+        v = (enc_out @ lp["wv"].astype(enc_out.dtype)).reshape(
+            B, S, Hkv, hd)
+        return k, v
+
+    return jax.vmap(one)(xp)  # [L, B, S, Hkv, hd] x2
+
+
+def forward(cfg: ArchConfig, params, batch):
+    """Full forward -> final hidden states [B, S, d] (pre final-norm).
+
+    batch: tokens [B,S] (+ patches/frames for vlm/audio) — training path
+    (no cache).  Returns (h, aux_loss).
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    aux = jnp.float32(0)
+
+    if cfg.enc_dec:
+        enc_out = encode(cfg, params, batch["frames"])
+        xkv = cross_kv(cfg, params["xattn"], enc_out)
+        x = x + _sinusoid(S, cfg.d_model, cdt)[None]
+
+        def body(x, lps):
+            lp, xp, kv = lps
+            x, _ = _dense_body(cfg, lp, x, pos, causal=True)
+            x = _xattn_body(cfg, xp, x, kv)
+            return x, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, (params["layers"], params["xattn"],
+                                      xkv))
+        return apply_norm(cfg, params["final_norm"], x), aux
+
+    if cfg.rwkv:
+        def body(x, lp):
+            x, _ = _rwkv_body(cfg, lp, x)
+            return x, None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return apply_norm(cfg, params["final_norm"], x), aux
+
+    if cfg.family == "hybrid":
+        shared = params["shared"]
+        every = cfg.attn_every
+
+        def body(carry, inp):
+            x, i = carry
+            lp = inp
+            x = x + ssm.mamba2_block(cfg, lp["mamba"],
+                                     apply_norm(cfg, lp["ln"], x))
+
+            def with_attn(x):
+                y, _ = _dense_body(cfg, shared, x, pos, causal=True)
+                return y
+
+            x = jax.lax.cond((i + 1) % every == 0, with_attn,
+                             lambda x: x, x)
+            return (x, i + 1), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, _), _ = jax.lax.scan(body, (x, jnp.int32(0)), params["layers"])
+        return apply_norm(cfg, params["final_norm"], x), aux
+
+    if cfg.n_experts:
+        if cfg.n_dense_layers:
+            def dbody(x, lp):
+                x, _ = _dense_body(cfg, lp, x, pos)
+                return x, None
+            if cfg.remat:
+                dbody = jax.checkpoint(dbody)
+            x, _ = jax.lax.scan(dbody, x, params["dense_layers"])
+
+        def body(carry, lp):
+            x, aux = carry
+            x, a, _ = _moe_body(cfg, lp, x, pos)
+            return (x, aux + a), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["layers"])
+        return apply_norm(cfg, params["final_norm"], x), aux
+
+    def body(x, lp):
+        x, _ = _dense_body(cfg, lp, x, pos)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return apply_norm(cfg, params["final_norm"], x), aux
+
+
+# ---------------------------------------------------------------------------
+# loss (chunked-vocab cross entropy)
+# ---------------------------------------------------------------------------
+def unembed(cfg, params, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return h @ w.astype(h.dtype)
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    """Causal LM loss. labels: next-token ids, -1 = masked."""
+    h, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    B, S, d = h.shape
+    ck = min(cfg.loss_chunk, S)
+    assert S % ck == 0
+    nch = S // ck
+
+    def chunk(carry, inp):
+        hs, ls = inp                       # [nc, B, ck, ...]
+        logits = unembed(cfg, params, hs).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(ls, 0)[..., None], axis=-1)[..., 0]
+        mask = (ls >= 0).astype(jnp.float32)
+        nll = (lse - tgt) * mask
+        return (carry[0] + nll.sum(), carry[1] + mask.sum()), None
+
+    hs = h.reshape(B, nch, ck, d).swapaxes(0, 1)
+    ls = labels.reshape(B, nch, ck).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(chunk, (jnp.float32(0), jnp.float32(0)),
+                                 (hs, ls))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux
+    return loss, {"nll": tot, "tokens": cnt, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Decode-state pytree (preallocated)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    hd, Hkv = cfg.head_dim, cfg.n_kv_heads
+
+    def kv(n):
+        return {"k": jnp.zeros((n, batch, max_len, Hkv, hd), cdt),
+                "v": jnp.zeros((n, batch, max_len, Hkv, hd), cdt),
+                "len": jnp.int32(0)}
+
+    if cfg.rwkv:
+        d, H, P = ssm.rwkv6_dims(cfg)
+        return {"S": jnp.zeros((cfg.n_layers, batch, H, P, P), jnp.float32),
+                "x_tm": jnp.zeros((cfg.n_layers, batch, 1, d), cdt),
+                "x_cm": jnp.zeros((cfg.n_layers, batch, 1, d), cdt)}
+    if cfg.family == "hybrid":
+        d_in, H, N, conv_dim = ssm.mamba2_dims(cfg)
+        n_sites = cfg.n_layers // cfg.attn_every
+        return {
+            "h": jnp.zeros((cfg.n_layers, batch, H, cfg.ssm_head_dim, N),
+                           jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch, ssm.CONV_K - 1,
+                               conv_dim), cdt),
+            "attn": kv(n_sites),
+        }
+    if cfg.enc_dec:
+        return {"self": kv(cfg.n_layers), "cross": None}  # set at prefill
+    return kv(cfg.n_layers)
+
+
+def _sinusoid_at(pos, d, dtype):
+    """Sinusoidal embedding at a dynamic scalar position -> [d]."""
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)]).astype(dtype)
+
+
+def prefill(cfg: ArchConfig, params, batch, max_len: int):
+    """Process the prompt, return (last-token logits [B,V], cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len)
+    x = embed_inputs(cfg, params, batch)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    if cfg.enc_dec:
+        enc_out = encode(cfg, params, batch["frames"])
+        xkv = cross_kv(cfg, params["xattn"], enc_out)
+        x = x + _sinusoid(S, cfg.d_model, cdt)[None]
+
+        def body(x, lps):
+            lp, xp, kv, ck, cv = lps
+            c = KVCache(ck, cv, jnp.int32(0))
+            h = apply_norm(cfg, lp["ln1"], x)
+            a, nc = attn_block(cfg, lp["attn"], h, pos, causal=True,
+                               cache=c)
+            x = x + a
+            x = _xattn_body(cfg, xp, x, kv)
+            x = x + mlp_block(cfg, lp["mlp"], apply_norm(cfg, lp["ln2"], x))
+            return x, (nc.k, nc.v)
+
+        x, (cks, cvs) = jax.lax.scan(
+            body, x, (params["layers"], params["xattn"], xkv,
+                      cache["self"]["k"], cache["self"]["v"]))
+        cache = {"self": {"k": cks, "v": cvs, "len": jnp.int32(S)},
+                 "cross": xkv}
+        h = apply_norm(cfg, params["final_norm"], x[:, -1:])
+        return unembed(cfg, params, h)[:, 0].astype(jnp.float32), cache
+
+    if cfg.rwkv:
+        def body2(x, lp):
+            y, st_tm = ssm.rwkv6_timemix(cfg, lp["tm"],
+                                         apply_norm(cfg, lp["ln1"], x))
+            x = x + y
+            y, st_cm = ssm.rwkv6_channelmix(cfg, lp["tm"],
+                                            apply_norm(cfg, lp["ln2"], x))
+            x = x + y
+            return x, {**st_tm, **st_cm}
+        x, sts = jax.lax.scan(body2, x, params["layers"])
+        cache = {"S": sts["S"], "x_tm": sts["x_tm"], "x_cm": sts["x_cm"]}
+        h = apply_norm(cfg, params["final_norm"], x[:, -1:])
+        return unembed(cfg, params, h)[:, 0].astype(jnp.float32), cache
+
+    if cfg.family == "hybrid":
+        shared = params["shared"]
+        every = cfg.attn_every
+        n_sites = cfg.n_layers // every
+        Lg = n_sites * every          # layers covered by full groups
+        ck0, cv0 = cache["attn"]["k"], cache["attn"]["v"]
+
+        def mamba_body(x, lp):
+            y, st = _mamba_prefill(cfg, lp["mamba"],
+                                   apply_norm(cfg, lp["ln"], x))
+            return x + y, (st["h"], st["conv"])
+
+        def group_body(x, xs):
+            glp, ck, cv = xs
+            x, (hs, cs) = jax.lax.scan(mamba_body, x, glp)
+            c = KVCache(ck, cv, jnp.int32(0))
+            h2 = apply_norm(cfg, shared["ln1"], x)
+            a, nc = attn_block(cfg, shared["attn"], h2, pos,
+                               causal=True, cache=c)
+            x = x + a
+            x = x + mlp_block(cfg, shared["mlp"],
+                              apply_norm(cfg, shared["ln2"], x))
+            return x, (hs, cs, nc.k, nc.v)
+
+        grouped = jax.tree.map(
+            lambda t: t[:Lg].reshape(n_sites, every, *t.shape[1:]),
+            params["layers"])
+        x, (hs, cs, cks, cvs) = jax.lax.scan(
+            group_body, x, (grouped, ck0, cv0))
+        hs = hs.reshape(Lg, *hs.shape[2:])
+        cs = cs.reshape(Lg, *cs.shape[2:])
+        if Lg < cfg.n_layers:      # trailing mamba layers (no attn site)
+            rest = jax.tree.map(lambda t: t[Lg:], params["layers"])
+            x, (hs2, cs2) = jax.lax.scan(mamba_body, x, rest)
+            hs = jnp.concatenate([hs, hs2])
+            cs = jnp.concatenate([cs, cs2])
+        cache = {"h": hs, "conv": cs,
+                 "attn": {"k": cks, "v": cvs, "len": jnp.int32(S)}}
+        h = apply_norm(cfg, params["final_norm"], x[:, -1:])
+        return unembed(cfg, params, h)[:, 0].astype(jnp.float32), cache
+
+    # dense / moe / vlm
+    def dense_prefill_body(x, lps):
+        lp, ck, cv = lps
+        c = KVCache(ck, cv, jnp.int32(0))
+        if "moe" in lp:
+            x, _, nc = _moe_body(cfg, lp, x, pos, cache=c)
+        else:
+            x, nc = _dense_body(cfg, lp, x, pos, cache=c)
+        return x, (nc.k, nc.v)
+
+    stacks = []
+    if cfg.n_experts and cfg.n_dense_layers:
+        nd = cfg.n_dense_layers
+        x, (k1, v1) = jax.lax.scan(
+            dense_prefill_body, x,
+            (params["dense_layers"], cache["k"][:nd], cache["v"][:nd]))
+        x, (k2, v2) = jax.lax.scan(
+            dense_prefill_body, x,
+            (params["layers"], cache["k"][nd:], cache["v"][nd:]))
+        ck = jnp.concatenate([k1, k2])
+        cv = jnp.concatenate([v1, v2])
+    else:
+        x, (ck, cv) = jax.lax.scan(
+            dense_prefill_body, x, (params["layers"], cache["k"],
+                                    cache["v"]))
+    cache = {"k": ck, "v": cv, "len": jnp.int32(S)}
+    h = apply_norm(cfg, params["final_norm"], x[:, -1:])
+    return unembed(cfg, params, h)[:, 0].astype(jnp.float32), cache
+
+
+def _mamba_prefill(cfg, p, x):
+    """mamba2_block + final recurrent state (for decode continuation)."""
+    # state after prefill = run block, then recompute final h via a cheap
+    # full-sequence pass of the recurrence on the last chunk. For
+    # simplicity we run the step-scan on the final CONV_K-1 tokens for the
+    # conv state and take h from a chunked pass that also returns it.
+    y = ssm.mamba2_block(cfg, p, x)
+    B, S, d = x.shape
+    d_in, H, N, conv_dim = ssm.mamba2_dims(cfg)
+    # conv state: last K-1 pre-conv channels
+    z, xc, Bm, Cm, dt = ssm._mamba_project(cfg, p, x)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_state = conv_in[:, -(ssm.CONV_K - 1):]
+    # final h: rerun the chunked recurrence, keeping only the carry
+    h = _mamba_final_state(cfg, p, x)
+    return y, {"h": h, "conv": conv_state}
+
+
+def _mamba_final_state(cfg, p, x, chunk: int = 256):
+    B, S, d = x.shape
+    d_in, H, N, _ = ssm.mamba2_dims(cfg)
+    P = cfg.ssm_head_dim
+    z, xc, Bm, Cm, dt = ssm._mamba_project(cfg, p, x)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out, _ = ssm._causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    loga = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt
+    xdt = xc.reshape(B, S, H, P).astype(jnp.float32) * dt[..., None]
+    Q = min(chunk, S)
+    nc = S // Q
+
+    def step(h, inp):
+        xdt_c, b_c, la_c = inp
+        l = jnp.cumsum(la_c, axis=1)
+        decay_out = jnp.exp(l[:, -1:, :] - l)
+        h = h * jnp.exp(l[:, -1])[..., None, None] + jnp.einsum(
+            "bsh,bshp,bsn->bhpn", decay_out, xdt_c,
+            b_c.astype(jnp.float32))
+        return h, None
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h, _ = jax.lax.scan(step, h0, (
+        xdt.reshape(B, nc, Q, H, P).swapaxes(0, 1),
+        Bm.reshape(B, nc, Q, N).swapaxes(0, 1),
+        loga.reshape(B, nc, Q, H).swapaxes(0, 1)))
+    return h
+
+
+def decode_step(cfg: ArchConfig, params, tokens, cache):
+    """One decode step. tokens: [B, 1] -> (logits [B, V], new cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)
+    B = x.shape[0]
+
+    if cfg.rwkv:
+        def body(x, lps):
+            lp, S0, xtm, xcm = lps
+            y, st_tm = ssm.rwkv6_timemix(
+                cfg, lp["tm"], apply_norm(cfg, lp["ln1"], x),
+                state={"S": S0, "x_tm": xtm})
+            x = x + y
+            y, st_cm = ssm.rwkv6_channelmix(
+                cfg, lp["tm"], apply_norm(cfg, lp["ln2"], x),
+                state={"x_cm": xcm})
+            x = x + y
+            return x, (st_tm["S"], st_tm["x_tm"], st_cm["x_cm"])
+        x, (S1, xtm1, xcm1) = jax.lax.scan(
+            body, x, (params["layers"], cache["S"], cache["x_tm"],
+                      cache["x_cm"]))
+        new_cache = {"S": S1, "x_tm": xtm1, "x_cm": xcm1}
+        h = apply_norm(cfg, params["final_norm"], x)
+        return unembed(cfg, params, h)[:, 0].astype(jnp.float32), new_cache
+
+    if cfg.enc_dec:
+        pos = jnp.full((B, 1), cache["self"]["len"], jnp.int32)
+        x = x + _sinusoid_at(cache["self"]["len"], cfg.d_model,
+                             cdt)[None, None]
+
+        def body(x, lps):
+            lp, xp, (kx, vx), ck, cv = lps
+            c = KVCache(ck, cv, cache["self"]["len"])
+            h = apply_norm(cfg, lp["ln1"], x)
+            a, nc = attn_block(cfg, lp["attn"], h, pos, causal=True,
+                               cache=c)
+            x = x + a
+            x = _xattn_body(cfg, xp, x, (kx, vx))
+            x = x + mlp_block(cfg, lp["mlp"],
+                              apply_norm(cfg, lp["ln2"], x))
+            return x, (nc.k, nc.v)
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (params["layers"], params["xattn"], cache["cross"],
+                      cache["self"]["k"], cache["self"]["v"]))
+        new_cache = {"self": {"k": ck, "v": cv,
+                              "len": cache["self"]["len"] + 1},
+                     "cross": cache["cross"]}
+        h = apply_norm(cfg, params["final_norm"], x)
+        return unembed(cfg, params, h)[:, 0].astype(jnp.float32), new_cache
+
+    if cfg.family == "hybrid":
+        shared = params["shared"]
+        every = cfg.attn_every
+        n_sites = cfg.n_layers // every
+        Lg = n_sites * every
+        ln = cache["attn"]["len"]
+        pos = jnp.full((B, 1), ln, jnp.int32)
+
+        def mamba_body(x, xs):
+            lp, h0, c0 = xs
+            y, st = ssm.mamba2_step(cfg, lp["mamba"],
+                                    apply_norm(cfg, lp["ln"], x),
+                                    {"h": h0, "conv": c0})
+            return x + y, (st["h"], st["conv"])
+
+        def group_body(x, xs):
+            glp, gh, gc, ck, cv = xs
+            x, (hs, cs) = jax.lax.scan(mamba_body, x, (glp, gh, gc))
+            c = KVCache(ck, cv, ln)
+            h2 = apply_norm(cfg, shared["ln1"], x)
+            a, nc = attn_block(cfg, shared["attn"], h2, pos,
+                               causal=True, cache=c)
+            x = x + a
+            x = x + mlp_block(cfg, shared["mlp"],
+                              apply_norm(cfg, shared["ln2"], x))
+            return x, (hs, cs, nc.k, nc.v)
+
+        grouped = jax.tree.map(
+            lambda t: t[:Lg].reshape(n_sites, every, *t.shape[1:]),
+            params["layers"])
+        gh = cache["h"][:Lg].reshape(n_sites, every, *cache["h"].shape[1:])
+        gc = cache["conv"][:Lg].reshape(n_sites, every,
+                                        *cache["conv"].shape[1:])
+        x, (hs, cs, cks, cvs) = jax.lax.scan(
+            group_body, x, (grouped, gh, gc, cache["attn"]["k"],
+                            cache["attn"]["v"]))
+        hs = hs.reshape(Lg, *hs.shape[2:])
+        cs = cs.reshape(Lg, *cs.shape[2:])
+        if Lg < cfg.n_layers:
+            rest = jax.tree.map(lambda t: t[Lg:], params["layers"])
+            x, (hs2, cs2) = jax.lax.scan(
+                mamba_body, x, (rest, cache["h"][Lg:], cache["conv"][Lg:]))
+            hs = jnp.concatenate([hs, hs2])
+            cs = jnp.concatenate([cs, cs2])
+        new_cache = {"h": hs, "conv": cs,
+                     "attn": {"k": cks, "v": cvs, "len": ln + 1}}
+        h = apply_norm(cfg, params["final_norm"], x)
+        return unembed(cfg, params, h)[:, 0].astype(jnp.float32), new_cache
+
+    # dense / moe / vlm
+    ln = cache["len"]
+    pos = jnp.full((B, 1), ln, jnp.int32)
+
+    def body(x, lps):
+        lp, ck, cv = lps
+        c = KVCache(ck, cv, ln)
+        if "moe" in lp:
+            x, _, nc = _moe_body(cfg, lp, x, pos, cache=c)
+        else:
+            x, nc = _dense_body(cfg, lp, x, pos, cache=c)
+        return x, (nc.k, nc.v)
+
+    if cfg.n_experts and cfg.n_dense_layers:
+        nd = cfg.n_dense_layers
+        x, (k1, v1) = jax.lax.scan(body, x, (
+            params["dense_layers"], cache["k"][:nd], cache["v"][:nd]))
+        x, (k2, v2) = jax.lax.scan(body, x, (
+            params["layers"], cache["k"][nd:], cache["v"][nd:]))
+        ck, cv = jnp.concatenate([k1, k2]), jnp.concatenate([v1, v2])
+    else:
+        x, (ck, cv) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                             cache["v"]))
+    new_cache = {"k": ck, "v": cv, "len": ln + 1}
+    h = apply_norm(cfg, params["final_norm"], x)
+    return unembed(cfg, params, h)[:, 0].astype(jnp.float32), new_cache

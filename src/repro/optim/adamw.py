@@ -1,0 +1,98 @@
+"""AdamW with cosine schedule and global-norm clipping (pure JAX pytrees).
+
+Master weights are kept in the params' own dtype (configs default f32);
+moments in f32.  ``update`` is functional: (grads, state, params) -> (new
+params, new state).  Optimizer state sharding follows the parameter
+sharding (ZeRO-style when params are FSDP-sharded — see parallel/).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptConfig(NamedTuple):
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any = None   # f32 master copy when params are bf16 (ZeRO-ish)
+
+
+def schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, frac)
+
+
+def init(params, master_weights: bool = False) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params) \
+        if master_weights else None
+    return OptState(step=jnp.int32(0), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(cfg: OptConfig, grads, state: OptState, params):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p, mw):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0  # no decay on norms
+        src = mw if mw is not None else p.astype(jnp.float32)
+        p_new = src - lr * (delta + wd * src)
+        return p_new.astype(p.dtype), m_new, v_new, \
+            (p_new if mw is not None else None)
+
+    masters = state.master if state.master is not None else \
+        jax.tree.map(lambda _: None, params)
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_mw = jax.tree.leaves(state.master) \
+        if state.master is not None else [None] * len(flat_p)
+    out = [upd(g, m, v, p, mw) for g, m, v, p, mw in
+           zip(flat_g, flat_m, flat_v, flat_p, flat_mw)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_master = jax.tree.unflatten(treedef, [o[3] for o in out]) \
+        if state.master is not None else None
+    return new_params, OptState(step, new_m, new_v, new_master), \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,174 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs for the 2D
+(data, model) production mesh (3D with a leading "pod" axis multi-pod).
+
+Strategy (DESIGN.md §6):
+  * TP (Megatron): attention QKV / MLP up column-sharded on `model`,
+    out/down row-sharded on `model`; vocab sharded on `model`.
+  * FSDP/ZeRO-3: the *other* large dim of every weight sharded over the
+    data axes; optimizer moments follow parameters, giving ZeRO
+    partitioning for free.  XLA inserts the per-layer all-gathers.
+  * EP: MoE expert dim sharded on `model` (expert-parallel); token
+    dispatch lowers to all-to-all on the (data × model) mesh.
+  * DP: batch over ("pod", "data").
+  * KV cache: heads on `model` when divisible, else head_dim on `model`
+    (GQA kv-heads < mesh); batch=1 long-context shards the cache's
+    *sequence* dim over `data` instead of batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh):
+    """The DP axes: ("pod","data") on a multi-pod mesh, else "data"."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPolicy:
+    fsdp: bool = True       # shard the non-TP dim of weights over data
+    seq_shard_cache: bool = False  # force sequence-sharded kv cache
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+_COL = {"wqkv", "wq", "wk", "wv", "w1", "w3", "fc1", "in_proj",
+        "Wr", "Wk", "Wv", "Wg", "Wk_cm"}
+_ROW = {"wo", "w2", "fc2", "out_proj", "Wo", "Wv_cm", "Wr_cm"}
+
+
+def _param_rule(path: tuple, shape: tuple, mesh, policy) -> P:
+    DATA = data_axes(mesh)
+    dp = _dp_size(mesh)
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leaf = names[-1]
+    stacked = any(n in ("layers", "dense_layers", "xattn", "enc_layers")
+                  for n in names)
+    lead: list = [None] if stacked else []
+    body_shape = shape[1:] if stacked else shape
+
+    def spec(*axes):
+        # drop shardings that don't divide the dim evenly (e.g. whisper's
+        # vocab 51865 on a 16-way model axis; a production fix is Megatron
+        # vocab padding — see EXPERIMENTS.md §Perf notes)
+        out = []
+        for dim, ax in zip(body_shape, axes):
+            if ax is None:
+                out.append(None)
+            else:
+                size = (dp if ax == DATA else mesh.shape[ax]
+                        if isinstance(ax, str) else dp)
+                out.append(ax if dim % size == 0 else None)
+        return P(*lead, *out)
+
+    d = None if not policy.fsdp else DATA
+    if leaf == "embed":
+        return spec("model", d)
+    if leaf in ("head", "patch_proj", "frame_proj"):
+        return spec(d, "model")
+    if leaf == "router":
+        return spec(d, None)
+    if leaf in ("w1", "w3", "w2") and len(body_shape) == 3:  # MoE experts
+        return spec("model", d, None)
+    if leaf in _COL and len(body_shape) == 2:
+        return spec(d, "model")
+    if leaf in _ROW and len(body_shape) == 2:
+        return spec("model", d)
+    if leaf == "conv_w":
+        return spec("model", None)
+    if leaf == "wA":
+        return spec(d, None)
+    if leaf == "wB":
+        return spec(None, d)
+    if len(body_shape) >= 2:
+        # fallback for any 2D+: shard largest dim over data
+        big = int(np.argmax(body_shape))
+        axes = [None] * len(body_shape)
+        if policy.fsdp:
+            axes[big] = DATA
+        return spec(*axes)
+    return P(*lead, *([None] * len(body_shape)))
+
+
+def param_specs(struct_tree, mesh: Mesh,
+                policy: ShardPolicy = ShardPolicy()):
+    """PartitionSpec tree matching a params (or adam-moments) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: _param_rule(p, x.shape, mesh, policy), struct_tree)
+
+
+def shardings_of(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+def batch_specs(cfg, mesh: Mesh, batch_tree, global_batch: int):
+    DATA = data_axes(mesh)
+    dp = _dp_size(mesh)
+    b = DATA if global_batch % dp == 0 else None
+
+    def rule(path, x):
+        return P(b, *([None] * (x.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_tree)
+
+
+# ---------------------------------------------------------------------------
+# decode caches / states
+# ---------------------------------------------------------------------------
+def cache_specs(cfg, mesh: Mesh, cache_tree, global_batch: int):
+    DATA = data_axes(mesh)
+    dp = _dp_size(mesh)
+    mp = mesh.shape["model"]
+    b = DATA if global_batch % dp == 0 else None
+    seq_data = b is None   # batch unshardable -> shard cache seq over data
+
+    def rule(path, x):
+        names = [getattr(k, "key", getattr(k, "name", str(k)))
+                 for k in path]
+        leaf = names[-1]
+        if leaf in ("k", "v") or "cross" in names:
+            # [L, B, S, Hkv, hd]
+            L, B, S, Hkv, hd = x.shape
+            heads_ok = Hkv % mp == 0
+            return P(None, b, DATA if seq_data else None,
+                     "model" if heads_ok else None,
+                     None if heads_ok else ("model" if hd % mp == 0
+                                            else None))
+        if leaf == "len":
+            return P()
+        if leaf == "S":        # rwkv state [L,B,H,P,P]
+            H = x.shape[2]
+            return P(None, b, "model" if H % mp == 0 else None, None, None)
+        if leaf == "h":        # mamba state [L,B,H,P,N]
+            H = x.shape[2]
+            return P(None, b, "model" if H % mp == 0 else None, None, None)
+        if leaf == "conv":     # [L,B,K-1,conv_dim]
+            cd = x.shape[-1]
+            return P(None, b, None, "model" if cd % mp == 0 else None)
+        if leaf in ("x_tm", "x_cm"):   # [L,B,1,d]
+            d = x.shape[-1]
+            return P(None, b, None, "model" if d % mp == 0 else None)
+        return P(*([None] * x.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda x: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,98 @@
+"""Batched serving engine: prefill + KV-cache decode in request waves.
+
+Requests are grouped into fixed-size *waves* (padded to a common prompt
+length); each wave is prefilled once and decoded step-by-step until every
+member hits EOS or its token budget.  The KV cache is wave-synchronous
+(one shared length scalar) — the greedy-batching analogue of the paper's
+static dataflow: a wave is one token occupying the fabric's arcs, and
+back-pressure (the full/empty bit) is the wave boundary.  Per-slot
+lengths/continuous batching would need a per-row cache clock; noted as
+future work in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # [S] int32
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: np.ndarray          # generated ids
+    prompt_len: int
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, batch_size: int = 8,
+                 max_len: int = 512, greedy: bool = True, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.greedy = greedy
+        self.key = jax.random.key(seed)
+        self._prefill = jax.jit(
+            lambda p, b: tfm.prefill(cfg, p, b, max_len=max_len))
+        self._decode = jax.jit(
+            lambda p, t, c: tfm.decode_step(cfg, p, t, c))
+
+    def _sample(self, logits):
+        if self.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits).astype(jnp.int32)
+
+    def run(self, requests: Sequence[Request]) -> list[Result]:
+        out: list[Result] = []
+        reqs = sorted(requests, key=lambda r: len(r.prompt))
+        for i in range(0, len(reqs), self.batch_size):
+            out.extend(self._run_wave(reqs[i:i + self.batch_size]))
+        return sorted(out, key=lambda r: r.uid)
+
+    def _run_wave(self, wave: Sequence[Request]) -> list[Result]:
+        B = len(wave)
+        S = max(len(r.prompt) for r in wave)
+        S = max(S, 8)
+        toks = np.zeros((B, S), np.int32)
+        for j, r in enumerate(wave):
+            toks[j, S - len(r.prompt):] = r.prompt   # left-pad
+        batch = {"tokens": toks}
+        if self.cfg.frontend == "patches":
+            batch["patches"] = np.zeros(
+                (B, self.cfg.n_patches, self.cfg.frontend_dim), np.float32)
+        if self.cfg.frontend == "frames":
+            batch["frames"] = np.zeros(
+                (B, self.cfg.enc_seq, self.cfg.frontend_dim), np.float32)
+        logits, cache = self._prefill(self.params, batch)
+        budget = max(r.max_new_tokens for r in wave)
+        done = np.zeros((B,), bool)
+        gen: list[list[int]] = [[] for _ in range(B)]
+        tok = self._sample(logits)[:, None]
+        for _ in range(budget):
+            t_np = np.asarray(tok[:, 0])
+            for j, r in enumerate(wave):
+                if not done[j]:
+                    gen[j].append(int(t_np[j]))
+                    if ((r.eos_id is not None and t_np[j] == r.eos_id)
+                            or len(gen[j]) >= r.max_new_tokens):
+                        done[j] = True
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = self._sample(logits)[:, None]
+        return [Result(r.uid, np.array(g, np.int32), len(r.prompt))
+                for r, g in zip(wave, gen)]

@@ -1,0 +1,260 @@
+"""Core static-dataflow tests: operators, benchmarks, engine vs compiled."""
+import numpy as np
+import pytest
+
+from repro.core import asm, library
+from repro.core.compile import compile_dag_stream, compile_cyclic
+from repro.core.engine import DataflowEngine, run_reference
+from repro.core.graph import Graph, Op
+
+
+# ---------------------------------------------------------------------------
+# single-operator firing semantics
+# ---------------------------------------------------------------------------
+def _single(op, feeds, n_out=1):
+    g = Graph(name=f"single_{op.name}")
+    n_in, n_out_op = (len(feeds),
+                      2 if op in (Op.COPY, Op.BRANCH) else 1)
+    ins = list(feeds)
+    outs = [f"z{i}" for i in range(n_out_op)]
+    g.add(op, ins, outs)
+    eng = DataflowEngine(g)
+    return eng.run(feeds), outs
+
+
+@pytest.mark.parametrize("op,a,b,expect", [
+    (Op.ADD, 3, 4, 7), (Op.SUB, 9, 4, 5), (Op.MUL, 3, 4, 12),
+    (Op.DIV, 9, 4, 2), (Op.AND, 6, 3, 2), (Op.OR, 6, 3, 7),
+    (Op.XOR, 6, 3, 5), (Op.MAX, 6, 3, 6), (Op.MIN, 6, 3, 3),
+    (Op.SHL, 3, 2, 12), (Op.SHR, 12, 2, 3),
+    (Op.IFGT, 5, 3, 1), (Op.IFGE, 3, 3, 1), (Op.IFLT, 5, 3, 0),
+    (Op.IFLE, 3, 3, 1), (Op.IFEQ, 3, 3, 1), (Op.IFDF, 3, 3, 0),
+])
+def test_primitive_ops(op, a, b, expect):
+    res, outs = _single(op, {"a": [a], "b": [b]})
+    assert int(res.outputs[outs[0]]) == expect
+    assert res.counts[outs[0]] == 1
+
+
+def test_copy_duplicates():
+    res, outs = _single(Op.COPY, {"a": [42]})
+    assert int(res.outputs["z0"]) == 42
+    assert int(res.outputs["z1"]) == 42
+
+
+def test_branch_routes_true_false():
+    g = Graph()
+    g.add(Op.BRANCH, ["a", "c"], ["t", "f"])
+    eng = DataflowEngine(g)
+    res = eng.run({"a": [10], "c": [1]})
+    assert res.counts["t"] == 1 and res.counts["f"] == 0
+    assert int(res.outputs["t"]) == 10
+    res = eng.run({"a": [11], "c": [0]})
+    assert res.counts["f"] == 1 and res.counts["t"] == 0
+    assert int(res.outputs["f"]) == 11
+
+
+def test_dmerge_selects_by_control():
+    g = Graph()
+    g.add(Op.DMERGE, ["a", "b", "c"], ["z"])
+    eng = DataflowEngine(g)
+    res = eng.run({"a": [10], "b": [20], "c": [1]})
+    assert int(res.outputs["z"]) == 10
+    # ctrl False selects b; a's token must remain unconsumed (static
+    # semantics: the non-selected input is untouched)
+    res = eng.run({"a": [10], "b": [20], "c": [0]})
+    assert int(res.outputs["z"]) == 20
+    assert res.counts["z"] == 1
+
+
+def test_ndmerge_first_arrival_priority_a():
+    g = Graph()
+    g.add(Op.NDMERGE, ["a", "b"], ["z"])
+    eng = DataflowEngine(g)
+    res = eng.run({"a": [1, 2], "b": [50]})
+    # stream: a wins ties; all three tokens eventually pass
+    assert res.counts["z"] == 3
+
+
+def test_one_token_per_arc_backpressure():
+    # producer cannot overwrite a full arc: a slow consumer stalls the
+    # pipeline but never loses/duplicates tokens.
+    g = Graph()
+    g.add(Op.ADD, ["a", "b"], ["s"])
+    g.add(Op.ADD, ["s", "c"], ["z"])
+    eng = DataflowEngine(g)
+    k = 5
+    res = eng.run({"a": np.arange(k), "b": np.ones(k, int),
+                   "c": np.zeros(k, int)})
+    assert res.counts["z"] == k
+    assert int(res.outputs["z"]) == k  # last token: (k-1)+1+0
+
+
+# ---------------------------------------------------------------------------
+# assembler round-trip
+# ---------------------------------------------------------------------------
+def test_asm_parse_emit_roundtrip():
+    g = asm.parse(library.FIBONACCI_ASM, name="fib")
+    g2 = asm.parse(asm.emit(g), name="fib2")
+    assert [(n.op, n.inputs, n.outputs) for n in g.nodes] == \
+           [(n.op, n.inputs, n.outputs) for n in g2.nodes]
+    assert g.consts == g2.consts
+
+
+def test_asm_listing1_conventions():
+    # paper Listing-1 style: inputs first then outputs, numbered lines
+    g = asm.parse("""
+        1. ndmerge s7, dadob, s1;
+        2. add s1, dadoe, s11;
+        3. gtdecider dadoa, s11, s5;
+    """)
+    assert g.nodes[0].op == Op.NDMERGE
+    assert g.nodes[0].inputs == ("s7", "dadob")
+    assert g.nodes[0].outputs == ("s1",)
+    assert g.nodes[2].op == Op.IFGT
+
+
+def test_asm_bad_arity_raises():
+    with pytest.raises(SyntaxError):
+        asm.parse("add s1, s2;")
+
+
+# ---------------------------------------------------------------------------
+# paper benchmarks: engine vs python reference vs compiled backends
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [0, 1, 2, 3, 7, 15])
+def test_fibonacci(n):
+    bench = library.fibonacci_graph()
+    eng = DataflowEngine(bench.graph, dtype=np.int32)
+    res = eng.run(bench.make_feeds(n))
+    assert int(res.outputs["fibo"]) == int(bench.reference(n))
+    assert int(res.outputs["pf"]) == n  # exit value of loop counter
+
+
+@pytest.mark.parametrize("n", [0, 3, 10])
+def test_fibonacci_compiled_matches_engine(n):
+    bench = library.fibonacci_graph()
+    eng = DataflowEngine(bench.graph, dtype=np.int32)
+    run = compile_cyclic(bench.graph, dtype=np.int32)
+    feeds = bench.make_feeds(n)
+    r1, r2 = eng.run(feeds), run(feeds)
+    assert int(r1.outputs["fibo"]) == int(r2.outputs["fibo"])
+    assert r1.cycles == r2.cycles  # bit-identical cycle semantics
+    assert r1.fired == r2.fired
+
+
+def test_fibonacci_from_asm():
+    g = asm.parse(library.FIBONACCI_ASM, name="fib_asm")
+    bench = library.fibonacci_graph()
+    eng = DataflowEngine(g, dtype=np.int32)
+    res = eng.run(bench.make_feeds(10))
+    assert int(res.outputs["fibo"]) == int(bench.reference(10))
+
+
+@pytest.mark.parametrize("name", ["vector_sum", "max_vector", "dot_prod",
+                                  "pop_count", "bubble_sort"])
+def test_vector_benchmarks_engine(name):
+    rng = np.random.default_rng(0)
+    bench = library.BENCHES[name]() if name != "bubble_sort" \
+        else library.bubble_sort_graph(6)
+    n = sum(1 for a in bench.graph.input_arcs())
+    if name == "dot_prod":
+        a = rng.integers(0, 50, (1, n // 2))
+        b = rng.integers(0, 50, (1, n // 2))
+        feeds, ref = bench.make_feeds(a, b), bench.reference(a, b)
+    elif name == "pop_count":
+        x = rng.integers(0, 2**16, (4,))
+        feeds, ref = bench.make_feeds(x), bench.reference(x)
+    else:
+        v = rng.integers(0, 100, (1, n))
+        feeds, ref = bench.make_feeds(v), bench.reference(v)
+    eng = DataflowEngine(bench.graph, dtype=np.int32)
+    res = eng.run(feeds)
+    if bench.out_arcs:
+        got = np.array([int(res.outputs[a]) for a in bench.out_arcs])
+        np.testing.assert_array_equal(got, np.asarray(ref).ravel())
+    else:
+        assert int(res.outputs[bench.out_arc]) == int(np.asarray(ref).ravel()[-1])
+
+
+@pytest.mark.parametrize("name", ["vector_sum", "max_vector", "dot_prod",
+                                  "pop_count"])
+def test_vector_benchmarks_compiled_stream(name):
+    rng = np.random.default_rng(1)
+    bench = library.BENCHES[name]()
+    k = 8
+    if name == "dot_prod":
+        n = len(bench.graph.input_arcs()) // 2
+        a, b = rng.integers(0, 50, (k, n)), rng.integers(0, 50, (k, n))
+        feeds, ref = bench.make_feeds(a, b), bench.reference(a, b)
+    elif name == "pop_count":
+        x = rng.integers(0, 2**16, (k,))
+        feeds, ref = bench.make_feeds(x), bench.reference(x)
+    else:
+        n = len(bench.graph.input_arcs())
+        v = rng.integers(0, 100, (k, n))
+        feeds, ref = bench.make_feeds(v), bench.reference(v)
+    fn = compile_dag_stream(bench.graph, dtype=np.int32)
+    out = fn({k_: np.asarray(v_, np.int32) for k_, v_ in feeds.items()})
+    np.testing.assert_array_equal(np.asarray(out[bench.out_arc]),
+                                  np.asarray(ref))
+
+
+def test_engine_streaming_pipelines_tokens():
+    """Throughput: a deep fabric sustains ~1 token per 2 cycles (str/ack
+    cadence), so streaming k tokens is far cheaper than k×latency."""
+    bench = library.vector_sum_graph(16)
+    eng = DataflowEngine(bench.graph, dtype=np.int32)
+    one = eng.run(bench.make_feeds(np.ones((1, 16), int)))
+    many = eng.run(bench.make_feeds(np.ones((32, 16), int)))
+    assert many.counts["vsum"] == 32
+    assert many.cycles < one.cycles + 2 * 32 + 4  # pipelined, not serial
+
+
+# ---------------------------------------------------------------------------
+# vectorized engine vs numpy reference engine (same cycle semantics)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("maker,args", [
+    (library.fibonacci_graph, (9,)),
+    (library.vector_sum_graph, None),
+    (library.pop_count_graph
+     if hasattr(library, "pop_count_graph") else library.popcount_graph,
+     None),
+])
+def test_engine_matches_reference(maker, args):
+    bench = maker() if maker is library.fibonacci_graph else maker(8)
+    if args is not None:
+        feeds = bench.make_feeds(*args)
+    elif bench.graph.name.startswith("pop"):
+        feeds = bench.make_feeds(np.array([1234, 65535, 0]))
+    else:
+        feeds = bench.make_feeds(np.arange(16).reshape(2, 8))
+    r_jax = DataflowEngine(bench.graph, dtype=np.int32).run(feeds)
+    r_np = run_reference(bench.graph, feeds, dtype=np.int32)
+    assert r_jax.cycles == r_np.cycles
+    assert r_jax.fired == r_np.fired
+    for a in bench.graph.output_arcs():
+        assert r_jax.counts[a] == r_np.counts[a]
+        if r_np.counts[a]:
+            np.testing.assert_array_equal(np.asarray(r_jax.outputs[a]),
+                                          np.asarray(r_np.outputs[a]))
+
+
+def test_tensor_tokens():
+    """Arcs carry tensors (the 16-bit bus generalized); fabric semantics
+    are unchanged."""
+    g = Graph()
+    g.add(Op.ADD, ["a", "b"], ["s"])
+    g.add(Op.MUL, ["s", "c"], ["z"])
+    eng = DataflowEngine(g, token_shape=(4,), dtype=np.float32)
+    a = np.ones((1, 4), np.float32) * 3
+    b = np.ones((1, 4), np.float32) * 4
+    c = np.ones((1, 4), np.float32) * 2
+    res = eng.run({"a": a, "b": b, "c": c})
+    np.testing.assert_allclose(np.asarray(res.outputs["z"]), 14.0)
+
+
+def test_resources_table():
+    for name, mk in library.BENCHES.items():
+        r = mk().graph.resources()
+        assert r["nodes"] > 0 and r["arcs"] > 0 and r["lut_weight"] > 0

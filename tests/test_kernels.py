@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per assignment: shape/dtype sweeps with hypothesis, assert_allclose
+against ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import library
+from repro.core.engine import run_reference
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    B=st.integers(1, 2),
+    Sq=st.sampled_from([8, 33, 128]),
+    Skv=st.sampled_from([16, 64, 130]),
+    Hkv=st.sampled_from([1, 2]),
+    G=st.sampled_from([1, 4]),
+    hd=st.sampled_from([16, 64]),
+    causal=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_flash_attention_kernel_sweep(B, Sq, Skv, Hkv, G, hd, causal,
+                                      dtype):
+    if causal and Skv != Sq:
+        Skv = Sq  # causal self-attention case
+    key = jax.random.key(Sq * 131 + Skv)
+    k1, k2, k3 = jax.random.split(key, 3)
+    H = Hkv * G
+    q = jax.random.normal(k1, (B, Sq, H, hd), dtype)
+    k = jax.random.normal(k2, (B, Skv, Hkv, hd), dtype)
+    v = jax.random.normal(k3, (B, Skv, Hkv, hd), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, bq=32, bk=32)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bq,bk", [(16, 64), (64, 16), (128, 128)])
+def test_flash_attention_block_shape_invariance(bq, bk):
+    key = jax.random.key(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (1, 96, 4, 32))
+    k = jax.random.normal(k2, (1, 96, 2, 32))
+    v = jax.random.normal(k3, (1, 96, 2, 32))
+    out = flash_attention_pallas(q, k, v, causal=True, bq=bq, bk=bk)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.sampled_from([1, 7, 64, 300]),
+    d=st.sampled_from([32, 128, 512]),
+    rows_blk=st.sampled_from([8, 256]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_rmsnorm_kernel_sweep(rows, d, rows_blk, dtype):
+    key = jax.random.key(rows * 7 + d)
+    x = jax.random.normal(key, (rows, d), dtype) * 3
+    w = jax.random.normal(jax.random.key(d), (d,), dtype)
+    out = rmsnorm_pallas(x, w, rows_blk=rows_blk)
+    want = ref.rmsnorm_ref(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_rmsnorm_3d_batch():
+    x = jax.random.normal(jax.random.key(1), (2, 17, 64))
+    w = jnp.ones((64,))
+    np.testing.assert_allclose(np.asarray(rmsnorm_pallas(x, w)),
+                               np.asarray(ref.rmsnorm_ref(x, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dataflow fire step: full benchmarks driven by the kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,args", [
+    ("fibonacci", (11,)),
+    ("pop_count", (np.array([12345, 65535, 7]),)),
+    ("vector_sum", (np.arange(64).reshape(2, 32),)),
+    ("bubble_sort", (np.array([[5, 3, 8, 1, 9, 2, 7, 4]]),)),
+])
+def test_fire_kernel_runs_benchmarks(name, args):
+    bench = library.BENCHES[name]()
+    feeds = bench.make_feeds(*args)
+    got = ops.run_fabric(bench.graph, feeds)
+    want = run_reference(bench.graph, feeds)
+    assert got.cycles == want.cycles
+    assert got.fired == want.fired
+    for a in bench.graph.output_arcs():
+        assert got.counts[a] == want.counts[a], a
+        if want.counts[a]:
+            assert int(got.outputs[a]) == int(np.asarray(want.outputs[a]))
+
+
+def test_fire_body_matches_ref_random_states():
+    """Property: kernel fire == jnp ref on random arc states."""
+    bench = library.popcount_graph(8)
+    tables, step = ops.make_fire_step(bench.graph)
+    p = tables["plan"]
+    A2 = p["A"] + 2
+    rng = np.random.default_rng(0)
+    for trial in range(10):
+        full = rng.integers(0, 2, (A2,)).astype(np.int32)
+        full[p["FULL_PAD"]] = 1
+        full[p["EMPTY_PAD"]] = 0
+        full[tables["const_mask"] > 0] = 1
+        val = rng.integers(0, 1000, (A2,)).astype(np.int32)
+        nf1, nv1, f1 = step(full, val)
+        nf2, nv2, f2 = ref.fire_step_ref(tables, jnp.asarray(full),
+                                         jnp.asarray(val))
+        np.testing.assert_array_equal(np.asarray(nf1),
+                                      np.asarray(nf2).astype(np.int32))
+        np.testing.assert_array_equal(np.asarray(nv1), np.asarray(nv2))
+        assert int(f1[0]) == int(f2)

@@ -1,0 +1,151 @@
+"""Layer numerics: flash attention vs naive oracle (hypothesis sweeps),
+chunked SSM vs per-token recurrence oracles."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_arch
+from repro.models import ssm
+from repro.models.layers import flash_attention, naive_attention
+
+
+# ---------------------------------------------------------------------------
+# flash attention == naive attention
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    B=st.integers(1, 3),
+    Sq=st.integers(1, 65),
+    Hkv=st.sampled_from([1, 2]),
+    G=st.sampled_from([1, 3]),
+    hd=st.sampled_from([8, 32]),
+    causal=st.booleans(),
+    qb=st.sampled_from([4, 16, 64]),
+    kb=st.sampled_from([8, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_flash_vs_naive(B, Sq, Hkv, G, hd, causal, qb, kb, dtype):
+    key = jax.random.key(B * 1000 + Sq)
+    k1, k2, k3 = jax.random.split(key, 3)
+    H = Hkv * G
+    q = jax.random.normal(k1, (B, Sq, H, hd), dtype)
+    k = jax.random.normal(k2, (B, Sq, Hkv, hd), dtype)
+    v = jax.random.normal(k3, (B, Sq, Hkv, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, q_block=qb, kv_block=kb)
+    ref = naive_attention(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_decode_with_cache_offset():
+    """q_len=1 decode against a padded cache with kv_len masking."""
+    key = jax.random.key(7)
+    B, Smax, H, hd = 2, 64, 4, 16
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, 1, H, hd))
+    k = jax.random.normal(k2, (B, Smax, H, hd))
+    v = jax.random.normal(k3, (B, Smax, H, hd))
+    kv_len = 37
+    out = flash_attention(q, k, v, causal=True, q_block=1, kv_block=16,
+                          q_offset=jnp.int32(kv_len - 1), kv_len=kv_len)
+    ref = naive_attention(q, k[:, :kv_len], v[:, :kv_len], causal=True,
+                          q_offset=kv_len - 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2: chunked == per-token recurrence
+# ---------------------------------------------------------------------------
+def _mamba_cfg():
+    return get_arch("zamba2-7b").reduced()
+
+
+def test_mamba2_chunked_vs_step():
+    cfg = _mamba_cfg()
+    p = ssm.init_mamba2(cfg, jax.random.key(0))
+    B, S = 2, 64
+    x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model),
+                          jnp.float32) * 0.5
+    y_chunk = ssm.mamba2_block(cfg, p, x, chunk=16)
+    # oracle: token-by-token recurrent stepping
+    state = ssm.mamba2_init_state(cfg, B)
+    ys = []
+    for t in range(S):
+        y, state = ssm.mamba2_step(cfg, p, x[:, t:t + 1], state)
+        ys.append(y)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_mamba2_chunk_size_invariance(chunk):
+    cfg = _mamba_cfg()
+    p = ssm.init_mamba2(cfg, jax.random.key(2))
+    x = jax.random.normal(jax.random.key(3), (1, 64, cfg.d_model)) * 0.5
+    y1 = ssm.mamba2_block(cfg, p, x, chunk=chunk)
+    y2 = ssm.mamba2_block(cfg, p, x, chunk=64)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6: chunked == per-token recurrence
+# ---------------------------------------------------------------------------
+def _rwkv_cfg():
+    return get_arch("rwkv6-1.6b").reduced()
+
+
+def _rwkv_step_oracle(cfg, p, x):
+    """Naive per-token recurrence for time-mix."""
+    from repro.models.ssm import _rwkv_proj, _shift, rwkv6_dims
+    d, H, P = rwkv6_dims(cfg)
+    B, S, _ = x.shape
+    xs = _shift(x)
+    r, k, v, g, logw = _rwkv_proj(cfg, p, x, xs)
+    r, k, v = (t.astype(jnp.float32) for t in (r, k, v))
+    u = p["u"].astype(jnp.float32)
+    w = jnp.exp(logw)
+    Sst = jnp.zeros((B, H, P, P))
+    ys = []
+    for t in range(S):
+        rt, kt, vt, wt = r[:, t], k[:, t], v[:, t], w[:, t]
+        att = Sst + u[None, :, :, None] * (kt[..., None] * vt[:, :, None])
+        yt = jnp.einsum("bhp,bhpv->bhv", rt, att)
+        Sst = wt[..., None] * Sst + kt[..., None] * vt[:, :, None]
+        ys.append(yt)
+    y = jnp.stack(ys, axis=1)                       # [B,S,H,P]
+    # same output path as rwkv6_timemix
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-5)
+    y = y.reshape(B, S, d) * p["ln_w"].astype(jnp.float32)
+    return (y.astype(x.dtype) * g) @ p["Wo"].astype(x.dtype)
+
+
+def test_rwkv6_chunked_vs_step():
+    cfg = _rwkv_cfg()
+    p = ssm.init_rwkv6(cfg, jax.random.key(4))
+    B, S = 2, 64
+    x = jax.random.normal(jax.random.key(5), (B, S, cfg.d_model)) * 0.5
+    y_chunk, _ = ssm.rwkv6_timemix(cfg, p, x, chunk=16)
+    y_ref = _rwkv_step_oracle(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_rwkv6_state_continuation():
+    """Processing [a;b] equals processing a then b with carried state."""
+    cfg = _rwkv_cfg()
+    p = ssm.init_rwkv6(cfg, jax.random.key(6))
+    x = jax.random.normal(jax.random.key(7), (1, 64, cfg.d_model)) * 0.5
+    y_full, _ = ssm.rwkv6_timemix(cfg, p, x, chunk=16)
+    y1, st = ssm.rwkv6_timemix(cfg, p, x[:, :32], chunk=16)
+    y2, _ = ssm.rwkv6_timemix(cfg, p, x[:, 32:], state=st, chunk=16)
+    np.testing.assert_allclose(np.asarray(y_full[:, 32:]), np.asarray(y2),
+                               rtol=3e-4, atol=3e-4)

@@ -1,0 +1,121 @@
+"""Dataflow-scheduled pipeline parallelism.
+
+Schedule-generation tests run in-process; the executor test (needs >1
+device) runs in a subprocess with XLA_FLAGS host-device override so the
+rest of the suite keeps a single device.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import dataflow_schedule, dense_schedule
+
+
+def test_dataflow_schedule_matches_handshake_cadence():
+    S, M = 4, 6
+    t = dataflow_schedule(S, M)
+    # paper-faithful: one token per two cycles per arc -> 2M+S-2 steps
+    # (stage s fires microbatch m at cycle s+2m+1)
+    assert t.shape[0] == 2 * M + S - 2
+    # stage s fires microbatch m at cycle s + 2m (0-based rows: s+2m)
+    for s in range(S):
+        fired = [(r, int(t[r, s])) for r in range(t.shape[0])
+                 if t[r, s] >= 0]
+        assert [m for _, m in fired] == list(range(M))  # in order, all M
+        assert [r for r, _ in fired] == [s + 2 * m for m in range(M)]
+
+
+def test_dense_schedule_wavefront():
+    S, M = 4, 6
+    t = dense_schedule(S, M)
+    assert t.shape[0] == M + S - 1
+    for r in range(t.shape[0]):
+        for s in range(S):
+            m = r - s
+            assert t[r, s] == (m if 0 <= m < M else -1)
+
+
+def test_every_stage_processes_every_microbatch_once():
+    for S, M in [(2, 2), (3, 5), (8, 3)]:
+        t = dataflow_schedule(S, M)
+        for s in range(S):
+            col = t[:, s]
+            assert sorted(col[col >= 0].tolist()) == list(range(M))
+
+
+_EXEC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core.pipeline import (dataflow_schedule, dense_schedule,
+                                 pipeline_apply, make_stage_fn)
+from repro.configs.base import get_arch
+from repro.models import transformer as tfm
+
+cfg = get_arch("internlm2-1.8b").reduced()
+L, S, M, mb, seq = 8, 4, 6, 2, 16
+import dataclasses
+cfg = dataclasses.replace(cfg, n_layers=L, remat=False)
+params = tfm.init_params(cfg, jax.random.key(0))
+layers = params["layers"]
+
+mesh = jax.make_mesh((4,), ("pp",))
+x = jax.random.normal(jax.random.key(1), (M, mb, seq, cfg.d_model),
+                      jnp.float32) * 0.1
+stage_fn = make_stage_fn(cfg, L // S)
+
+for sched_name, sched in [("dataflow", dataflow_schedule(S, M)),
+                          ("dense", dense_schedule(S, M))]:
+    y = pipeline_apply(mesh, stage_fn, layers, x, sched)
+    # reference: plain scan over all layers, per microbatch
+    def ref_fn(x):
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32),
+                               (mb, seq))
+        def body(x, lp):
+            from repro.models.transformer import _dense_body
+            x, _ = _dense_body(cfg, lp, x, pos)
+            return x, None
+        y, _ = jax.lax.scan(body, x, layers)
+        return y
+    ref = jax.vmap(ref_fn)(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    print(f"OK {sched_name} fwd")
+
+# gradient flows through the pipeline (reverse schedule via autodiff)
+sched = dense_schedule(S, M)
+def loss_pipe(layers):
+    return jnp.sum(pipeline_apply(mesh, stage_fn, layers, x, sched) ** 2)
+def loss_ref(layers):
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (mb, seq))
+    def ref_fn(x):
+        def body(x, lp):
+            from repro.models.transformer import _dense_body
+            x, _ = _dense_body(cfg, lp, x, pos)
+            return x, None
+        y, _ = jax.lax.scan(body, x, layers)
+        return y
+    return jnp.sum(jax.vmap(ref_fn)(x) ** 2)
+g1 = jax.grad(loss_pipe)(layers)
+g2 = jax.grad(loss_ref)(layers)
+for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=5e-3, atol=5e-3)
+print("OK grads")
+"""
+
+
+def test_pipeline_executor_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    r = subprocess.run([sys.executable, "-c", _EXEC_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "OK dataflow fwd" in r.stdout
+    assert "OK dense fwd" in r.stdout
+    assert "OK grads" in r.stdout

@@ -1,0 +1,135 @@
+"""Sharding-rule unit tests (no big meshes: 1-device abstract checks)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_arch
+from repro.launch.dryrun import input_specs, model_flops, abstract_params
+from repro.configs.base import SHAPES
+from repro.parallel import sharding as shd
+
+
+class FakeMesh:
+    """Duck-typed mesh for rule tests (axis sizes only)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+        self.devices = np.empty(
+            tuple(shape.values()), dtype=object)
+
+
+@pytest.fixture
+def mesh():
+    return FakeMesh({"data": 16, "model": 16})
+
+
+@pytest.fixture
+def pod_mesh():
+    return FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_param_rules_dense(mesh):
+    cfg = get_arch("internlm2-1.8b")
+    struct = abstract_params(cfg)
+    specs = shd.param_specs(struct, mesh)
+    # stacked layers: leading axis unsharded
+    wqkv = specs["layers"]["attn"]["wqkv"]
+    assert wqkv == P(None, "data", "model")
+    wo = specs["layers"]["attn"]["wo"]
+    assert wo == P(None, "model", "data")
+    # embedding: vocab 92544 % 16 == 0 -> model-sharded
+    assert specs["embed"] == P("model", "data")
+    # norms replicated
+    assert specs["final_norm"]["w"] == P(None)
+
+
+def test_param_rules_respect_divisibility(mesh):
+    cfg = get_arch("whisper-medium")   # vocab 51865: not divisible
+    struct = abstract_params(cfg)
+    specs = shd.param_specs(struct, mesh)
+    assert specs["embed"][0] is None   # vocab axis dropped, not uneven
+
+
+def test_param_rules_moe(mesh):
+    cfg = get_arch("kimi-k2-1t-a32b")
+    struct = abstract_params(cfg)
+    specs = shd.param_specs(struct, mesh)
+    w1 = specs["layers"]["moe"]["w1"]
+    assert w1[1] == "model"            # experts -> EP on model axis
+    assert specs["layers"]["moe"]["router"][-1] is None
+
+
+def test_param_rules_multipod(pod_mesh):
+    cfg = get_arch("internlm2-1.8b")
+    struct = abstract_params(cfg)
+    specs = shd.param_specs(struct, pod_mesh)
+    wqkv = specs["layers"]["attn"]["wqkv"]
+    assert wqkv == P(None, ("pod", "data"), "model")
+
+
+def test_batch_specs_shard_batch(mesh, pod_mesh):
+    cfg = get_arch("internlm2-1.8b")
+    batch = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    assert shd.batch_specs(cfg, mesh, batch, 256)["tokens"] == \
+        P("data", None)
+    assert shd.batch_specs(cfg, pod_mesh, batch, 256)["tokens"] == \
+        P(("pod", "data"), None)
+    # unshardable batch (long_500k, B=1) -> replicated
+    b1 = {"tokens": jax.ShapeDtypeStruct((1, 1), jnp.int32)}
+    assert shd.batch_specs(cfg, mesh, b1, 1)["tokens"] == P(None, None)
+
+
+def test_cache_specs_kv_heads_vs_hd(mesh):
+    cfg = get_arch("stablelm-1.6b")    # kv=32 divisible -> heads sharded
+    cache = {"k": jax.ShapeDtypeStruct((24, 128, 1024, 32, 64),
+                                       jnp.bfloat16),
+             "v": jax.ShapeDtypeStruct((24, 128, 1024, 32, 64),
+                                       jnp.bfloat16),
+             "len": jax.ShapeDtypeStruct((), jnp.int32)}
+    specs = shd.cache_specs(cfg, mesh, cache, 128)
+    assert specs["k"] == P(None, "data", None, "model", None)
+
+    cfg2 = get_arch("internlm2-1.8b")  # kv=8 not divisible -> hd sharded
+    cache2 = {"k": jax.ShapeDtypeStruct((24, 128, 1024, 8, 128),
+                                        jnp.bfloat16),
+              "v": jax.ShapeDtypeStruct((24, 128, 1024, 8, 128),
+                                        jnp.bfloat16),
+              "len": jax.ShapeDtypeStruct((), jnp.int32)}
+    specs2 = shd.cache_specs(cfg2, mesh, cache2, 128)
+    assert specs2["k"] == P(None, "data", None, None, "model")
+
+
+def test_cache_specs_seq_shard_for_batch1(mesh):
+    cfg = get_arch("zamba2-7b")
+    cache = {"k": jax.ShapeDtypeStruct((13, 1, 524288, 32, 112),
+                                       jnp.bfloat16),
+             "len": jax.ShapeDtypeStruct((), jnp.int32)}
+    specs = shd.cache_specs(cfg, mesh, cache, 1)
+    # batch=1: sequence dim takes the data axis
+    assert specs["k"] == P(None, None, "data", "model", None)
+
+
+def test_input_specs_cover_all_cells():
+    for name in ("starcoder2-7b", "internvl2-76b", "whisper-medium",
+                 "rwkv6-1.6b"):
+        cfg = get_arch(name)
+        for shape in cfg.shapes():
+            spec = input_specs(cfg, shape)
+            assert "tokens" in spec
+            if cfg.frontend == "patches" and shape.kind != "decode":
+                assert "patches" in spec
+            if cfg.frontend == "frames" and shape.kind != "decode":
+                assert "frames" in spec
+
+
+def test_model_flops_scaling():
+    cfg = get_arch("internlm2-1.8b")
+    t = model_flops(cfg, SHAPES["train_4k"])
+    p = model_flops(cfg, SHAPES["prefill_32k"])
+    # train: 6ND over 1M tokens; prefill: 2ND over 1M tokens -> 3x
+    assert abs(t / p - 3.0) < 1e-6
+    moe = get_arch("kimi-k2-1t-a32b")
+    assert model_flops(moe, SHAPES["train_4k"]) < \
+        6 * moe.param_count() * 4096 * 256  # active < total
