@@ -2,6 +2,8 @@
 
   table1_*   paper Table 1 analogue (6 dataflow benchmarks: resources +
              engine cycles + compiled throughput)
+  engine_*   block-fused/batched engine executor sweep (also serialized
+             to BENCH_dataflow.json for cross-PR perf tracking)
   kernel_*   Pallas kernel micro-benchmarks vs jnp references
   train_*    end-to-end reduced-config train-step timings (per family)
   roofline_* aggregated dry-run roofline terms (if records exist)
@@ -10,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -48,9 +52,25 @@ def _train_steps():
               f"{float(m['loss']):.3f}")
 
 
+def dataflow_json(path: str | None = None) -> list[dict]:
+    """Run the engine-backend sweep and write BENCH_dataflow.json (one
+    record per bench/backend/B/K: us_per_call, cycles/s, tokens/s,
+    dispatches) so the perf trajectory is machine-readable across PRs."""
+    from benchmarks import table1_dataflow
+
+    recs = table1_dataflow.backend_rows()
+    path = path or os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_dataflow.json")
+    with open(path, "w") as f:
+        json.dump(recs, f, indent=1)
+    table1_dataflow.print_backend_csv(recs)
+    return recs
+
+
 def main() -> None:
     from benchmarks import table1_dataflow, kernels_bench, roofline
     table1_dataflow.main()
+    dataflow_json()
     kernels_bench.main()
     _train_steps()
     roofline.main()

@@ -8,6 +8,13 @@ Paper columns FF / LUT / Slices / Fmax map to (DESIGN.md §2):
             architecture-determined rate, like the paper's 613 MHz) and
             the compiled backend's wall-clock tokens/s on this host.
 
+Besides the resource table, ``backend_rows`` sweeps the cycle-accurate
+executors (DESIGN.md §3): the seed per-cycle Pallas driver, the XLA
+engine at K ∈ {1, block}, and the fused Pallas block engine, each at
+batch sizes B ∈ {1, 8, 64} — reporting us/call, cycles/s, tokens/s and
+device dispatches.  ``benchmarks/run.py`` serializes these records to
+BENCH_dataflow.json so the perf trajectory is tracked across PRs.
+
 CSV: name,us_per_call,derived
 """
 from __future__ import annotations
@@ -41,26 +48,13 @@ def rows():
         r = g.resources()
         eng = DataflowEngine(g)
         if name == "fibonacci":
-            feeds1 = bench.make_feeds(20)
-            feeds_k = feeds1
+            feeds1 = feeds_k = library.random_feeds(name, bench, 20, rng)
             run = compile_cyclic(g)
             compiled_call = lambda: run(feeds1)
             n_stream = 1
         else:
-            n = len(g.input_arcs())
-            if name == "dot_prod":
-                a = rng.integers(0, 9, (stream_k, n // 2))
-                b = rng.integers(0, 9, (stream_k, n // 2))
-                feeds1 = bench.make_feeds(a[:1], b[:1])
-                feeds_k = bench.make_feeds(a, b)
-            elif name == "pop_count":
-                x = rng.integers(0, 2 ** 16, (stream_k,))
-                feeds1 = bench.make_feeds(x[:1])
-                feeds_k = bench.make_feeds(x)
-            else:
-                v = rng.integers(0, 99, (stream_k, n))
-                feeds1 = bench.make_feeds(v[:1])
-                feeds_k = bench.make_feeds(v)
+            feeds_k = library.random_feeds(name, bench, stream_k, rng)
+            feeds1 = {a: np.asarray(v)[:1] for a, v in feeds_k.items()}
             fn = compile_dag_stream(g)
             feeds_np = {k: np.asarray(v, np.int32)
                         for k, v in feeds_k.items()}
@@ -85,14 +79,79 @@ def rows():
     return out
 
 
-def main():
+def backend_rows(Bs=(1, 8, 64), block=16, reps=3, k_tokens=8):
+    """Executor sweep: one JSON-able record per (bench, backend, B, K).
+
+    Backends:
+      pallas-percycle — seed baseline: one pallas dispatch PER CYCLE
+                        (kernels.ops.run_fabric), B=1 only.
+      xla             — jnp cycle body in a while_loop, K cycles fused
+                        per loop iteration (K=1 is the seed engine).
+      pallas          — fused fire-block kernel, K cycles + environment
+                        per dispatch; batched via the in-kernel B grid.
+    """
+    from repro.kernels import ops
+
+    out = []
+    for name, mk in library.BENCHES.items():
+        bench = mk()
+        g = bench.graph
+        k = 20 if name == "fibonacci" else k_tokens
+        feeds = library.random_feeds(name, bench, k,
+                                     np.random.default_rng(0))
+        tok1 = library.tokens_out(name, k)
+
+        def record(backend, B, K, call, res):
+            rs = res if isinstance(res, list) else [res]
+            us = _time(call, reps=reps)
+            cyc = sum(r.cycles for r in rs)
+            out.append(dict(
+                name=name, backend=backend, B=B, K=K,
+                us_per_call=round(us, 1),
+                cycles_per_s=round(cyc / us * 1e6),
+                tokens_per_s=round(B * tok1 / us * 1e6),
+                dispatches=rs[0].dispatches,
+                cycles=rs[0].cycles))
+
+        compiled = ops.make_fire_step(g)
+        base_call = lambda: ops.run_fabric(g, feeds, compiled=compiled)
+        record("pallas-percycle", 1, 1, base_call, base_call())
+
+        for be, K in (("xla", 1), ("xla", block), ("pallas", block)):
+            eng = DataflowEngine(g, backend=be, block_cycles=K)
+            for B in Bs:
+                if B == 1:
+                    call = lambda: eng.run(feeds)
+                else:
+                    fb = [library.random_feeds(
+                        name, bench, k, np.random.default_rng(b))
+                        for b in range(B)]
+                    call = lambda: eng.run_batch(fb)
+                record(be, B, K, call, call())
+    return out
+
+
+def print_backend_csv(recs):
+    """One CSV line per executor record (shared with benchmarks/run.py)."""
+    for r in recs:
+        print(f"engine_{r['name']}_{r['backend']}_B{r['B']}_K{r['K']},"
+              f"{r['us_per_call']},"
+              f"cycles_per_s={r['cycles_per_s']};"
+              f"tokens_per_s={r['tokens_per_s']};"
+              f"dispatches={r['dispatches']}")
+
+
+def main(with_backends: bool = False):
     for r in rows():
         derived = (f"nodes={r['nodes']};arcs={r['arcs']};"
                    f"ff_bits={r['ff_bits']};lut={r['lut_weight']};"
                    f"lat_cyc={r['latency_cycles']};"
                    f"cyc_per_tok={r['cycles_per_token']}")
         print(f"table1_{r['name']},{r['compiled_us_per_token']},{derived}")
+    if with_backends:
+        print_backend_csv(backend_rows())
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(with_backends="--backends" in sys.argv)

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import DECIDER_OPS, Graph, Op, PRIMITIVE_OPS
-from repro.core.engine import EngineResult, _alu
+from repro.core.engine import EngineResult, _alu, pack_feeds
 
 
 def _scalar_alu(op: Op, a, b, dtype):
@@ -106,21 +106,7 @@ def compile_cyclic(graph: Graph, token_shape=(), dtype=jnp.int32,
     nodes = list(graph.nodes)
 
     def run(feeds: Mapping[str, object], max_cycles: int = max_cycles):
-        feeds = dict(feeds)
-        n_in = len(input_arcs)
-        max_len = max((np.shape(v)[0] for v in feeds.values()), default=0)
-        max_len = max(max_len, 1)
-        fv = np.zeros((n_in, max_len, *ts), dtype)
-        fl = np.zeros((n_in,), np.int32)
-        for k, a in enumerate(input_arcs):
-            if a in feeds:
-                v = np.asarray(feeds[a], dtype)
-                if v.shape[1:] != ts:
-                    v = np.broadcast_to(
-                        v.reshape(v.shape[0], *([1] * len(ts))),
-                        (v.shape[0], *ts)).astype(dtype)
-                fv[k, :v.shape[0]] = v
-                fl[k] = v.shape[0]
+        fv, fl = pack_feeds(input_arcs, feeds, ts, dtype)
         out_last, out_count, cycles, fired = _compiled(
             jnp.asarray(fv), jnp.asarray(fl), max_cycles)
         return EngineResult(
@@ -244,8 +230,25 @@ def compile_cyclic(graph: Graph, token_shape=(), dtype=jnp.int32,
 
 
 def compile_graph(graph: Graph, token_shape=(), dtype=jnp.int32,
-                  max_cycles: int = 100_000):
-    """Dispatch: DAG -> stream-vmapped SSA; cyclic -> unrolled engine."""
+                  max_cycles: int = 100_000, backend: str = "auto",
+                  block_cycles: int = 16):
+    """Dispatch a fabric to an executor.
+
+    backend="auto" keeps the historical shape-directed choice: DAG ->
+    stream-vmapped SSA (``compile_dag_stream``); cyclic -> trace-time
+    unrolled engine (``compile_cyclic``).  Any
+    :data:`repro.core.engine.BACKENDS` name instead returns a
+    cycle-accurate block-fused engine callable ``run(feeds) ->
+    EngineResult`` (plus a ``.engine`` attribute exposing
+    ``run_batch``), so benches and tests drive every executor through
+    one entry point."""
+    if backend != "auto":
+        from repro.core.engine import DataflowEngine
+        eng = DataflowEngine(graph, token_shape, dtype, max_cycles,
+                             backend=backend, block_cycles=block_cycles)
+        run = lambda feeds, max_cycles=None: eng.run(feeds, max_cycles)
+        run.engine = eng
+        return run
     if graph.is_cyclic() or any(
             n.op in (Op.BRANCH, Op.NDMERGE) for n in graph.nodes):
         return compile_cyclic(graph, token_shape, dtype, max_cycles)

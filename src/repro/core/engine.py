@@ -121,52 +121,236 @@ class EngineResult:
     counts: dict        # arc -> number of tokens drained
     cycles: int
     fired: int          # total node firings
+    dispatches: int | None = None   # device dispatches used (if tracked)
+
+
+def pack_feeds(input_arcs, feeds, token_shape=(), dtype=np.int32,
+               pad_rows: int | None = None, min_len: int = 1):
+    """Dense (feed_vals[n_in, L, *ts], feed_len[n_in]) from an arc->stream
+    mapping.  Shared by every backend and by compile_cyclic.  pad_rows
+    forces at least that many stream rows (the Pallas block kernel wants
+    n_in >= 1); min_len floors L (so a stream axis always exists)."""
+    feeds = dict(feeds or {})
+    unknown = set(feeds) - set(input_arcs)
+    if unknown:
+        raise ValueError(f"feeds for non-input arcs: {sorted(unknown)}")
+    ts = tuple(token_shape)
+    n_in = max(len(input_arcs), pad_rows or 0)
+    max_len = max((np.shape(v)[0] for v in feeds.values()), default=0)
+    max_len = max(max_len, min_len)
+    feed_vals = np.zeros((n_in, max_len, *ts), dtype)
+    feed_len = np.zeros((n_in,), np.int32)
+    for k, a in enumerate(input_arcs):
+        if a in feeds:
+            v = np.asarray(feeds[a], dtype)
+            if v.shape[1:] != ts:
+                v = np.broadcast_to(
+                    v.reshape(v.shape[0], *([1] * len(ts))),
+                    (v.shape[0], *ts)).astype(dtype)
+            feed_vals[k, :v.shape[0]] = v
+            feed_len[k] = v.shape[0]
+    return feed_vals, feed_len
+
+
+BACKENDS = ("xla", "pallas", "reference")
 
 
 class DataflowEngine:
-    """Cycle-accurate executor for a static dataflow :class:`Graph`."""
+    """Cycle-accurate executor for a static dataflow :class:`Graph`.
+
+    backend:
+      * ``"xla"``       — vectorized jnp cycle body, ``lax.while_loop``
+        over *blocks* of ``block_cycles`` fused cycles (one XLA dispatch
+        per run).  Supports tensor tokens and any dtype.  Batched runs
+        vmap the whole block loop.
+      * ``"pallas"``    — the fused ``fire_block_pallas`` kernel: K
+        cycles + environment feed/drain per device dispatch, arc state
+        VMEM-resident within a block.  Scalar int32 tokens.  Batched
+        runs use the explicit batch grid in the kernel (one dispatch
+        for all B streams per block).
+      * ``"reference"`` — the pure-numpy oracle (`run_reference`).
+
+    All backends share one :func:`_plan` arc/state layout and report
+    bit-identical outputs/counts/fired; ``cycles`` is reconstructed from
+    the last progress cycle, so block-granular quiescence detection does
+    not change the reported cycle count.
+    """
 
     def __init__(self, graph: Graph, token_shape: tuple[int, ...] = (),
-                 dtype=jnp.int32, max_cycles: int = 100_000):
+                 dtype=jnp.int32, max_cycles: int = 100_000,
+                 backend: str = "xla", block_cycles: int = 1):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+        if block_cycles < 1:
+            raise ValueError("block_cycles must be >= 1")
         self.graph = graph
         self.token_shape = tuple(token_shape)
         self.dtype = jnp.dtype(dtype)
         self.max_cycles = max_cycles
+        self.backend = backend
+        self.block_cycles = int(block_cycles)
         self.p = _plan(graph)
-        self._run = jax.jit(self._run_impl, static_argnames=("max_cycles",))
+        if backend == "pallas":
+            if self.token_shape != () or self.dtype != jnp.int32:
+                raise ValueError(
+                    "pallas backend supports scalar int32 tokens only")
+            from repro.kernels.dataflow_fire import block_plan_arrays
+            self._tables = block_plan_arrays(graph)
+            self._steps: dict[tuple[int, bool], object] = {}
+        else:
+            self._run = jax.jit(self._run_impl,
+                                static_argnames=("max_cycles",))
+            self._vruns: dict[int, object] = {}
 
     # -- public ---------------------------------------------------------
     def run(self, feeds: Mapping[str, object] | None = None,
             max_cycles: int | None = None) -> EngineResult:
         """feeds: arc -> [k, *token_shape] stream of tokens (k may vary)."""
+        max_cycles = max_cycles or self.max_cycles
+        if self.backend == "reference":
+            return run_reference(self.graph, feeds, self.token_shape,
+                                 np.dtype(str(self.dtype)), max_cycles)
+        if self.backend == "pallas":
+            return self._run_pallas(feeds, max_cycles)
         p = self.p
-        feeds = dict(feeds or {})
-        unknown = set(feeds) - set(p["input_arcs"])
-        if unknown:
-            raise ValueError(f"feeds for non-input arcs: {sorted(unknown)}")
-        n_in = len(p["input_arcs"])
-        max_len = max((np.shape(v)[0] for v in feeds.values()), default=0)
-        max_len = max(max_len, 1)
-        feed_vals = np.zeros((n_in, max_len, *self.token_shape),
-                             self.dtype)
-        feed_len = np.zeros((n_in,), np.int32)
-        for k, a in enumerate(p["input_arcs"]):
-            if a in feeds:
-                v = np.asarray(feeds[a], self.dtype)
-                if v.shape[1:] != self.token_shape:
-                    v = np.broadcast_to(
-                        v.reshape(v.shape[0], *([1] * len(self.token_shape))),
-                        (v.shape[0], *self.token_shape)).astype(self.dtype)
-                feed_vals[k, :v.shape[0]] = v
-                feed_len[k] = v.shape[0]
+        feed_vals, feed_len = pack_feeds(
+            p["input_arcs"], feeds, self.token_shape, self.dtype)
         outs, counts, cycles, fired = self._run(
             jnp.asarray(feed_vals), jnp.asarray(feed_len),
-            max_cycles=max_cycles or self.max_cycles)
-        out_arcs = p["output_arcs"]
+            max_cycles=max_cycles)
+        return self._result_from_state(outs, counts, int(cycles),
+                                       int(fired), dispatches=1)
+
+    def run_batch(self, feeds_batch, max_cycles: int | None = None
+                  ) -> list[EngineResult]:
+        """Execute B independent token streams through one fabric.
+
+        feeds_batch: sequence of B feed dicts (streams may have unequal
+        lengths — shorter streams quiesce early and idle harmlessly).
+        Returns one EngineResult per stream, bit-identical to running
+        each stream alone."""
+        max_cycles = max_cycles or self.max_cycles
+        feeds_batch = list(feeds_batch)
+        if not feeds_batch:
+            return []
+        if self.backend == "reference":
+            return [run_reference(self.graph, f, self.token_shape,
+                                  np.dtype(str(self.dtype)), max_cycles)
+                    for f in feeds_batch]
+        p = self.p
+        L = max((max((np.shape(v)[0] for v in (f or {}).values()),
+                     default=0) for f in feeds_batch), default=0)
+        L = max(L, 1)
+        pad = 1 if self.backend == "pallas" else None
+        packed = [pack_feeds(p["input_arcs"], f, self.token_shape,
+                             self.dtype, pad_rows=pad, min_len=L)
+                  for f in feeds_batch]
+        feed_vals = np.stack([fv for fv, _ in packed])
+        feed_len = np.stack([fl for _, fl in packed])
+        if self.backend == "pallas":
+            return self._run_pallas_batch(feed_vals, feed_len, max_cycles)
+        vrun = self._vruns.get(max_cycles)
+        if vrun is None:
+            mc = max_cycles
+            vrun = jax.jit(jax.vmap(
+                lambda fv, fl: self._run_impl(fv, fl, max_cycles=mc)))
+            self._vruns[max_cycles] = vrun
+        outs, counts, cycles, fired = vrun(jnp.asarray(feed_vals),
+                                           jnp.asarray(feed_len))
+        return [self._result_from_state(outs[b], counts[b], int(cycles[b]),
+                                        int(fired[b]), dispatches=1)
+                for b in range(len(feeds_batch))]
+
+    def _result_from_state(self, out_last, out_count, cycles, fired,
+                           dispatches):
+        """Per-arc result dicts from flat accumulators (all backends)."""
+        out_arcs = self.p["output_arcs"]
         return EngineResult(
-            outputs={a: outs[i] for i, a in enumerate(out_arcs)},
-            counts={a: int(counts[i]) for i, a in enumerate(out_arcs)},
-            cycles=int(cycles), fired=int(fired))
+            outputs={a: out_last[i] for i, a in enumerate(out_arcs)},
+            counts={a: int(out_count[i]) for i, a in enumerate(out_arcs)},
+            cycles=cycles, fired=fired, dispatches=dispatches)
+
+    # -- pallas backend (host loop over fused blocks) --------------------
+    def _pallas_step(self, n_cycles: int, batched: bool):
+        """Jitted block step for a given size, compiled lazily and cached
+        (the plan tables are built once in __init__ and shared).  Only
+        two sizes ever occur per run: block_cycles and the final
+        max_cycles remainder."""
+        key = (n_cycles, batched)
+        step = self._steps.get(key)
+        if step is None:
+            from repro.kernels import ops as _kops
+            _, step = _kops.make_block_step(
+                self.graph, n_cycles, batched=batched, tables=self._tables)
+            self._steps[key] = step
+        return step
+
+    def _pallas_state0(self, batch: int | None = None):
+        p = self.p
+        A2 = p["A"] + 2
+        n_in = max(len(p["input_arcs"]), 1)
+        n_out = max(len(p["output_arcs"]), 1)
+        full = np.zeros((A2,), np.int32)
+        val = np.zeros((A2,), np.int32)
+        full[p["FULL_PAD"]] = 1
+        for a, v in self.graph.consts.items():
+            full[p["aidx"][a]] = 1
+            val[p["aidx"][a]] = int(v)
+        state = (full, val, np.zeros((n_in,), np.int32),
+                 np.zeros((n_out,), np.int32), np.zeros((n_out,), np.int32))
+        if batch is not None:
+            state = tuple(np.broadcast_to(x, (batch, *x.shape)).copy()
+                          for x in state)
+        return tuple(jnp.asarray(x) for x in state)
+
+    def _run_pallas(self, feeds, max_cycles: int) -> EngineResult:
+        p = self.p
+        K = self.block_cycles
+        fv, fl = pack_feeds(p["input_arcs"], feeds, (), np.int32,
+                            pad_rows=1)
+        fv, fl = jnp.asarray(fv), jnp.asarray(fl)
+        state = self._pallas_state0()
+        base = last = fired = dispatches = 0
+        while True:
+            nb = min(K, max_cycles - base)  # never simulate past the cap
+            *state, f, lp = self._pallas_step(nb, False)(fv, fl, *state)
+            state = tuple(state)
+            dispatches += 1
+            fired += int(f[0])
+            lp = int(lp[0])
+            if lp > 0:
+                last = base + lp
+            base += nb
+            if lp < nb or base >= max_cycles:
+                break   # idle block tail => quiescent (idle is absorbing)
+        cycles = min(last + 1, max_cycles)
+        return self._result_from_state(state[3], state[4], cycles, fired,
+                                       dispatches)
+
+    def _run_pallas_batch(self, feed_vals, feed_len,
+                          max_cycles: int) -> list[EngineResult]:
+        K = self.block_cycles
+        B = feed_vals.shape[0]
+        fv, fl = jnp.asarray(feed_vals), jnp.asarray(feed_len)
+        state = self._pallas_state0(batch=B)
+        base = dispatches = 0
+        last = np.zeros((B,), np.int64)
+        fired = np.zeros((B,), np.int64)
+        while True:
+            nb = min(K, max_cycles - base)  # never simulate past the cap
+            *state, f, lp = self._pallas_step(nb, True)(fv, fl, *state)
+            state = tuple(state)
+            dispatches += 1
+            fired += np.asarray(f)[:, 0]
+            lp = np.asarray(lp)[:, 0]
+            last = np.where(lp > 0, base + lp, last)
+            base += nb
+            if (lp < nb).all() or base >= max_cycles:
+                break
+        return [self._result_from_state(
+            state[3][b], state[4][b],
+            int(min(last[b] + 1, max_cycles)), int(fired[b]), dispatches)
+            for b in range(B)]
 
     # -- implementation ---------------------------------------------------
     def _run_impl(self, feed_vals, feed_len, *, max_cycles):
@@ -194,6 +378,7 @@ class DataflowEngine:
             out_last=jnp.zeros((n_out, *ts), dtype),
             out_count=jnp.zeros((n_out,), jnp.int32),
             cycles=jnp.int32(0), fired=jnp.int32(0),
+            last_prog=jnp.int32(0),
             progress=jnp.bool_(True),
         )
 
@@ -296,17 +481,39 @@ class DataflowEngine:
                 drained_any = jnp.bool_(False)
 
             n_fired = jnp.sum(ready.astype(jnp.int32))
+            prog = fed_any | drained_any | (n_fired > 0)
             return dict(
                 full=full, val=val, ptr=ptr, out_last=out_last,
                 out_count=out_count, cycles=s["cycles"] + 1,
                 fired=s["fired"] + n_fired,
-                progress=fed_any | drained_any | (n_fired > 0))
+                last_prog=jnp.where(prog, s["cycles"] + 1, s["last_prog"]),
+                progress=prog)
+
+        def block(s):
+            # K fused cycles per while_loop iteration; quiescence is only
+            # inspected at block granularity.  `progress` of the block's
+            # LAST cycle decides continuation: an idle cycle is absorbing
+            # (no feed/fire/drain can re-arm without one of the others),
+            # so tail-idle == quiescent.
+            return jax.lax.fori_loop(0, self.block_cycles,
+                                     lambda i, s: cycle(s), s)
 
         def cond(s):
-            return s["progress"] & (s["cycles"] < max_cycles)
+            # only admit blocks that fit entirely under the cap; the
+            # max_cycles % K remainder runs below, so a cutoff simulates
+            # EXACTLY max_cycles cycles (bit-identical fired/counts to
+            # the per-cycle reference even mid-activity).
+            return s["progress"] & (s["cycles"] + self.block_cycles
+                                    <= max_cycles)
 
-        s = jax.lax.while_loop(cond, cycle, state0)
-        return s["out_last"], s["out_count"], s["cycles"], s["fired"]
+        s = jax.lax.while_loop(cond, block, state0)
+        s = jax.lax.fori_loop(0, max_cycles % self.block_cycles,
+                              lambda i, s: cycle(s), s)
+        # reported cycles = last progress cycle + 1 trailing idle cycle,
+        # exactly the per-cycle reference count, regardless of block
+        # overrun past quiescence.
+        cycles = jnp.minimum(s["last_prog"] + 1, max_cycles)
+        return s["out_last"], s["out_count"], cycles, s["fired"]
 
 
 def _expand(mask, ts):

@@ -251,3 +251,27 @@ BENCHES: dict[str, Callable[[], Bench]] = {
     "bubble_sort": bubble_sort_graph,
     "pop_count": popcount_graph,
 }
+
+
+def random_feeds(name: str, bench: Bench, k: int, rng=None) -> dict:
+    """A k-token random feed-stream dict for any bench (for fibonacci, k
+    is the iteration count).  One place for the per-bench input-shape
+    logic the drivers and tests used to each duplicate."""
+    rng = np.random.default_rng(rng) if not hasattr(rng, "integers") \
+        else rng
+    n = len(bench.graph.input_arcs())
+    if name == "fibonacci":
+        return bench.make_feeds(int(k))
+    if name == "dot_prod":
+        return bench.make_feeds(rng.integers(0, 9, (k, n // 2)),
+                                rng.integers(0, 9, (k, n // 2)))
+    if name == "pop_count":
+        return bench.make_feeds(rng.integers(0, 2 ** 16, (k,)))
+    return bench.make_feeds(rng.integers(0, 99, (k, n)))
+
+
+def tokens_out(name: str, k: int) -> int:
+    """Result tokens a run of `random_feeds(name, ..., k)` produces: one
+    per stream element for DAG fabrics, one exit result for the
+    fibonacci loop (whatever its iteration count)."""
+    return 1 if name == "fibonacci" else k

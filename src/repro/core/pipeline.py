@@ -36,6 +36,18 @@ from repro.core.graph import Graph, Op
 from repro.core.engine import run_reference
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map with a fallback for jax<=0.4.x, where it still
+    lives in jax.experimental.shard_map (and the no-replication-check
+    kwarg is spelled check_rep, not check_vma)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
 # ---------------------------------------------------------------------------
 # schedule generation
 # ---------------------------------------------------------------------------
@@ -132,11 +144,10 @@ def pipeline_apply(mesh: Mesh, stage_fn, stage_params, x_micro,
             jnp.where(stage == S - 1, out, jnp.zeros_like(out)), "pp")
         return out
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         per_stage, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P("pp"), stage_params), P()),
-        out_specs=P(),
-        check_vma=False)
+        out_specs=P())
     return fn(stage_params, x_micro)
 
 

@@ -1,17 +1,36 @@
-"""Pallas kernel for one static-dataflow engine cycle ("fire step").
+"""Pallas kernels for static-dataflow engine cycles ("fire steps").
 
 The paper's FPGA executes all ready operators concurrently; on TPU the
-cycle is one vectorized pass.  The kernel is *gather-only* (TPU-friendly,
-no scatters): node-side arrays compute readiness and results, then each
-arc pulls its next state from its (unique) producer/consumer — legal
-precisely BECAUSE of the paper's one-sender/one-receiver channel rule.
+cycle is one vectorized pass.  The kernels are *gather-only*
+(TPU-friendly, no scatters): node-side arrays compute readiness and
+results, then each arc pulls its next state from its (unique)
+producer/consumer — legal precisely BECAUSE of the paper's
+one-sender/one-receiver channel rule.
+
+Two granularities:
+
+* ``fire_step_pallas``  — ONE engine cycle per ``pallas_call``; the
+  environment (input strobe / output drain) is handled by the caller.
+  Kept as the per-cycle baseline (and for tests of the bare fire rule).
+* ``fire_block_pallas`` — K engine cycles per ``pallas_call`` via an
+  in-kernel ``lax.fori_loop``.  The ``full``/``val`` arc registers stay
+  VMEM-resident across all K cycles and the *environment itself runs
+  inside the kernel*: input arcs are strobed from per-arc feed streams
+  (``feed_vals``/``feed_len`` with a per-arc pointer) and output arcs
+  are drained into last-value + token-count accumulators.  Quiescence
+  is only observable at block granularity — the kernel reports the
+  relative cycle of the last progress (``last_prog``), and the host
+  stops when a block's tail goes idle (idle is absorbing: no feed, no
+  fire, no drain can re-arm without one of the others).  This replaces
+  one device dispatch + HBM round-trip per cycle with one per K cycles.
+  ``fire_block_batched_pallas`` adds an explicit batch grid dimension:
+  B independent token streams ride one fabric in a single dispatch.
 
 Inputs (all VMEM-resident; fabrics are small — one FPGA's worth):
   full[A2] int32, val[A2] int32       arc registers (+2 dummy slots)
   opcode[N2], in_idx[N2,3], out_idx[N2,2]   node table (+1 dummy node)
   prod_node/prod_slot[A2], cons_node/cons_slot[A2]  arc adjacency
-  const_mask[A2]
-Outputs: new full/val, fired count.
+  const_mask[A2], env_row[A2], out_mask[A2]         environment maps
 """
 from __future__ import annotations
 
@@ -167,3 +186,187 @@ def fire_step_pallas(tables, full, val, interpret=None):
       tables["prod_node"], tables["prod_slot"], tables["cons_node"],
       tables["cons_slot"], tables["const_mask"], full, val)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Block-fused execution: K cycles + environment per pallas_call
+# ---------------------------------------------------------------------------
+_TABLE_KEYS = ("opcode", "in_idx", "out_idx", "prod_node", "prod_slot",
+               "cons_node", "cons_slot", "const_mask", "env_row",
+               "in_arc_idx", "out_arc_idx", "out_mask")
+
+
+def block_plan_arrays(graph):
+    """plan_arrays + environment maps for in-kernel feed/drain.
+
+    env_row[A2]     row into the feed table for input arcs, n_in (a pad
+                    row with feed_len 0) otherwise — makes the input
+                    strobe a pure gather.
+    in_arc_idx[n_in]  arc slot of each feed row (EMPTY_PAD pad rows).
+    out_arc_idx[n_out] arc slot of each output accumulator row.
+    out_mask[A2]    1 on output arcs (drained unconditionally each cycle).
+    n_in/n_out are padded to at least 1 so the kernel never sees a
+    zero-length axis.
+    """
+    import numpy as np
+    t = plan_arrays(graph)
+    p = t["plan"]
+    A2 = p["A"] + 2
+    n_in = max(len(p["input_arcs"]), 1)
+    n_out = max(len(p["output_arcs"]), 1)
+    env_row = np.full((A2,), n_in, np.int32)
+    in_arc_idx = np.full((n_in,), p["EMPTY_PAD"], np.int32)
+    for r, a in enumerate(p["input_arcs"]):
+        env_row[p["aidx"][a]] = r
+        in_arc_idx[r] = p["aidx"][a]
+    out_arc_idx = np.full((n_out,), p["EMPTY_PAD"], np.int32)
+    out_mask = np.zeros((A2,), np.int32)
+    for r, a in enumerate(p["output_arcs"]):
+        out_arc_idx[r] = p["aidx"][a]
+        out_mask[p["aidx"][a]] = 1
+    t.update(env_row=env_row, in_arc_idx=in_arc_idx,
+             out_arc_idx=out_arc_idx, out_mask=out_mask)
+    return t
+
+
+def _env_cycle(tab, feed_vals, feed_len, carry):
+    """One full engine cycle (feed -> fire -> drain), gather-only.
+
+    tab: dict of the _TABLE_KEYS arrays.  carry: (full, val, ptr,
+    out_last, out_count, fired, last_prog, cyc).  Ordering matches
+    `repro.core.engine.run_reference` exactly: inputs strobe first, the
+    fire rule sees the post-feed registers, outputs drain post-fire.
+    """
+    full, val, ptr, out_last, out_count, fired, last_prog, cyc = carry
+    L = feed_vals.shape[1]
+    # 1. strobe environment input buses (pad row: feed_len 0, never fires)
+    can_feed = (full[tab["in_arc_idx"]] == 0) & (ptr < feed_len)
+    nxt = jnp.take_along_axis(
+        feed_vals, jnp.clip(ptr, 0, L - 1)[:, None], axis=1)[:, 0]
+    can_p = jnp.concatenate([can_feed, jnp.zeros((1,), bool)])
+    nxt_p = jnp.concatenate([nxt, jnp.zeros((1,), nxt.dtype)])
+    fed_arc = can_p[tab["env_row"]]
+    val = jnp.where(fed_arc, nxt_p[tab["env_row"]], val)
+    full = jnp.where(fed_arc, 1, full)
+    ptr = ptr + can_feed.astype(ptr.dtype)
+    # 2. fire every ready node
+    full, val, n_fired = _fire_body(
+        tab["opcode"], tab["in_idx"], tab["out_idx"], tab["prod_node"],
+        tab["prod_slot"], tab["cons_node"], tab["cons_slot"],
+        tab["const_mask"], full, val)
+    # 3. environment drains output buses
+    got = full[tab["out_arc_idx"]] > 0
+    out_last = jnp.where(got, val[tab["out_arc_idx"]], out_last)
+    out_count = out_count + got.astype(out_count.dtype)
+    full = jnp.where(tab["out_mask"] > 0, 0, full)
+    progress = jnp.any(can_feed) | (n_fired > 0) | jnp.any(got)
+    return (full, val, ptr, out_last, out_count, fired + n_fired,
+            jnp.where(progress, cyc + 1, last_prog), cyc + 1)
+
+
+def _block_body(tab, feed_vals, feed_len, full, val, ptr, out_last,
+                out_count, n_cycles: int):
+    """Run `n_cycles` engine cycles; pure jnp (shared by kernel + ref).
+
+    Returns (full, val, ptr, out_last, out_count, fired, last_prog)
+    where fired counts firings within this block and last_prog is the
+    1-based relative index of the last cycle that made progress (0 if
+    the whole block was idle).  last_prog < n_cycles implies the fabric
+    is quiescent — idle is absorbing."""
+    carry = (full, val, ptr, out_last, out_count,
+             jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    carry = jax.lax.fori_loop(
+        0, n_cycles, lambda i, c: _env_cycle(tab, feed_vals, feed_len, c),
+        carry)
+    return carry[:7]
+
+
+def _block_kernel(n_cycles, *refs):
+    """pallas kernel: 12 table refs, feed_vals, feed_len, 5 state refs in;
+    5 state refs + fired + last_prog out."""
+    ins, outs = refs[:19], refs[19:]
+    tab = {k: r[...] for k, r in zip(_TABLE_KEYS, ins[:12])}
+    feed_vals, feed_len = ins[12][...], ins[13][...]
+    state = [r[...] for r in ins[14:19]]
+    res = _block_body(tab, feed_vals, feed_len, *state, n_cycles=n_cycles)
+    for r, v in zip(outs[:5], res[:5]):
+        r[...] = v
+    outs[5][0] = res[5]
+    outs[6][0] = res[6]
+
+
+def _batched_block_kernel(n_cycles, *refs):
+    """Same as _block_kernel but every non-table ref has a leading
+    batch-block dim of 1 (grid over B selects the stream)."""
+    ins, outs = refs[:19], refs[19:]
+    tab = {k: r[...] for k, r in zip(_TABLE_KEYS, ins[:12])}
+    feed_vals, feed_len = ins[12][0], ins[13][0]
+    state = [r[0] for r in ins[14:19]]
+    res = _block_body(tab, feed_vals, feed_len, *state, n_cycles=n_cycles)
+    for r, v in zip(outs[:5], res[:5]):
+        r[...] = v[None]
+    outs[5][0, 0] = res[5]
+    outs[6][0, 0] = res[6]
+
+
+def _whole(x):
+    """BlockSpec covering the whole (broadcast) array, any grid arity."""
+    nd = x.ndim
+    return pl.BlockSpec(x.shape, lambda *_, n=nd: (0,) * n)
+
+
+def fire_block_pallas(tables, feed_vals, feed_len, full, val, ptr,
+                      out_last, out_count, *, n_cycles: int,
+                      interpret=None):
+    """K fused engine cycles (environment included) via one pallas_call.
+
+    tables: block_plan_arrays() output (jnp or numpy arrays).
+    feed_vals[n_in, L] int32, feed_len[n_in] int32.
+    State: full/val[A2], ptr[n_in], out_last/out_count[n_out], int32.
+    Returns (full', val', ptr', out_last', out_count', fired[1],
+    last_prog[1])."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    tabs = [jnp.asarray(tables[k]) for k in _TABLE_KEYS]
+    state = [full, val, ptr, out_last, out_count]
+    out_sd = ([jax.ShapeDtypeStruct(x.shape, jnp.int32) for x in state]
+              + [jax.ShapeDtypeStruct((1,), jnp.int32)] * 2)
+    return pl.pallas_call(
+        functools.partial(_block_kernel, n_cycles),
+        in_specs=[_whole(x) for x in (*tabs, feed_vals, feed_len, *state)],
+        out_specs=[_whole(s) for s in out_sd],
+        out_shape=out_sd,
+        interpret=interpret,
+    )(*tabs, feed_vals, feed_len, *state)
+
+
+def fire_block_batched_pallas(tables, feed_vals, feed_len, full, val, ptr,
+                              out_last, out_count, *, n_cycles: int,
+                              interpret=None):
+    """Batched block step: grid=(B,) — B independent streams through one
+    fabric in a single dispatch.  All state/feed arrays carry a leading
+    batch axis; the node/arc tables are shared (broadcast) across the
+    grid.  Returns the same tuple as fire_block_pallas with a leading
+    B axis (fired/last_prog: [B, 1])."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B = full.shape[0]
+    tabs = [jnp.asarray(tables[k]) for k in _TABLE_KEYS]
+    state = [full, val, ptr, out_last, out_count]
+
+    def row(x):
+        nd = x.ndim
+        return pl.BlockSpec((1, *x.shape[1:]),
+                            lambda b, n=nd: (b,) + (0,) * (n - 1))
+
+    out_sd = ([jax.ShapeDtypeStruct(x.shape, jnp.int32) for x in state]
+              + [jax.ShapeDtypeStruct((B, 1), jnp.int32)] * 2)
+    return pl.pallas_call(
+        functools.partial(_batched_block_kernel, n_cycles),
+        grid=(B,),
+        in_specs=[_whole(x) for x in tabs]
+        + [row(x) for x in (feed_vals, feed_len, *state)],
+        out_specs=[row(s) for s in out_sd],
+        out_shape=out_sd,
+        interpret=interpret,
+    )(*tabs, feed_vals, feed_len, *state)

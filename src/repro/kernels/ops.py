@@ -10,7 +10,10 @@ import functools
 
 import jax
 
-from repro.kernels.dataflow_fire import fire_step_pallas, plan_arrays
+from repro.kernels.dataflow_fire import (block_plan_arrays,
+                                         fire_block_batched_pallas,
+                                         fire_block_pallas,
+                                         fire_step_pallas, plan_arrays)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 
@@ -40,14 +43,45 @@ def make_fire_step(graph):
     return tables, step
 
 
-def run_fabric(graph, feeds, dtype=None, max_cycles: int = 10_000):
-    """Drive a fabric to completion using the Pallas fire-step kernel,
-    with the environment (feed/drain) handled host-side.  Returns an
-    EngineResult mirroring repro.core.engine semantics."""
+def make_block_step(graph, n_cycles: int, batched: bool = False,
+                    tables=None):
+    """Compile the fused K-cycle fire-block kernel for a fabric.
+
+    Returns (tables, jitted step).  Single-stream step signature:
+      step(feed_vals, feed_len, full, val, ptr, out_last, out_count)
+        -> (full', val', ptr', out_last', out_count', fired[1],
+            last_prog[1])
+    With batched=True every array gains a leading B axis (grid over
+    streams inside the kernel; one dispatch for all B).  Pass a prior
+    call's `tables` to reuse the plan instead of rebuilding it."""
+    import jax.numpy as jnp
+    if tables is None:
+        tables = block_plan_arrays(graph)
+    jt = {k: jnp.asarray(v) for k, v in tables.items() if k != "plan"}
+    call = fire_block_batched_pallas if batched else fire_block_pallas
+
+    @jax.jit
+    def step(feed_vals, feed_len, full, val, ptr, out_last, out_count):
+        return call(jt, feed_vals, feed_len, full, val, ptr, out_last,
+                    out_count, n_cycles=n_cycles)
+
+    return tables, step
+
+
+def run_fabric(graph, feeds, dtype=None, max_cycles: int = 10_000,
+               compiled=None):
+    """Drive a fabric to completion using the per-cycle Pallas fire-step
+    kernel, with the environment (feed/drain) handled host-side: ONE
+    device dispatch per engine cycle.  This is the seed baseline the
+    fused block engine (DataflowEngine backend="pallas") is benchmarked
+    against.  Pass compiled=(tables, step) from make_fire_step to reuse
+    a compilation across calls.  Returns an EngineResult mirroring
+    repro.core.engine semantics (dispatches = cycles)."""
     import numpy as np
     from repro.core.engine import EngineResult
 
-    tables, step = make_fire_step(graph)
+    tables, step = compiled if compiled is not None \
+        else make_fire_step(graph)
     p = tables["plan"]
     A2 = p["A"] + 2
     full = np.zeros((A2,), np.int32)
@@ -88,4 +122,4 @@ def run_fabric(graph, feeds, dtype=None, max_cycles: int = 10_000):
                 progress = True
         cycles += 1
     return EngineResult(outputs=out_last, counts=out_count, cycles=cycles,
-                        fired=fired)
+                        fired=fired, dispatches=cycles)

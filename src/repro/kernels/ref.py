@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import naive_attention
-from repro.kernels.dataflow_fire import _fire_body
+from repro.kernels.dataflow_fire import _TABLE_KEYS, _block_body, _fire_body
 
 
 def flash_attention_ref(q, k, v, *, causal=True):
@@ -27,3 +27,13 @@ def fire_step_ref(tables, full, val):
         jnp.asarray(tables["prod_slot"]), jnp.asarray(tables["cons_node"]),
         jnp.asarray(tables["cons_slot"]), jnp.asarray(tables["const_mask"]),
         full, val)
+
+
+def fire_block_ref(tables, feed_vals, feed_len, full, val, ptr, out_last,
+                   out_count, *, n_cycles: int):
+    """Same math as the fused block kernel, plain jnp (no pallas_call).
+    Also the vmap target for the batched-stream path."""
+    tab = {k: jnp.asarray(tables[k]) for k in _TABLE_KEYS}
+    return _block_body(tab, jnp.asarray(feed_vals), jnp.asarray(feed_len),
+                       full, val, ptr, out_last, out_count,
+                       n_cycles=n_cycles)
