@@ -76,5 +76,23 @@ def main() -> None:
     roofline.main()
 
 
+def quick() -> None:
+    """CI smoke: the dataflow executor sweep at tiny K/B over 2 benches
+    (serve_bench.py has its own --quick).  Catches benchmark-code rot
+    without the full sweep's runtime; writes no JSON (the committed
+    BENCH_*.json files are full-run artifacts)."""
+    from benchmarks import table1_dataflow
+    for r in table1_dataflow.rows(benches=("fibonacci", "vector_sum")):
+        print(f"table1_{r['name']},{r['compiled_us_per_token']},"
+              f"nodes={r['nodes']};lat_cyc={r['latency_cycles']}")
+    recs = table1_dataflow.backend_rows(
+        Bs=(1, 2), block=4, reps=1, k_tokens=2,
+        benches=("fibonacci", "vector_sum"))
+    table1_dataflow.print_backend_csv(recs)
+
+
 if __name__ == "__main__":
-    main()
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))   # `benchmarks` importable from CLI
+    quick() if "--quick" in sys.argv else main()

@@ -38,11 +38,13 @@ def _time(fn, *args, reps=5):
     return float(np.median(ts)) * 1e6   # us
 
 
-def rows():
+def rows(benches=None):
     rng = np.random.default_rng(0)
     out = []
     stream_k = 64
     for name, mk in library.BENCHES.items():
+        if benches is not None and name not in benches:
+            continue
         bench = mk()
         g = bench.graph
         r = g.resources()
@@ -79,7 +81,8 @@ def rows():
     return out
 
 
-def backend_rows(Bs=(1, 8, 64), block=16, reps=3, k_tokens=8):
+def backend_rows(Bs=(1, 8, 64), block=16, reps=3, k_tokens=8,
+                 benches=None):
     """Executor sweep: one JSON-able record per (bench, backend, B, K).
 
     Backends:
@@ -89,11 +92,16 @@ def backend_rows(Bs=(1, 8, 64), block=16, reps=3, k_tokens=8):
                         per loop iteration (K=1 is the seed engine).
       pallas          — fused fire-block kernel, K cycles + environment
                         per dispatch; batched via the in-kernel B grid.
+
+    benches: optional iterable of bench names to restrict the sweep
+    (the --quick smoke path).
     """
     from repro.kernels import ops
 
     out = []
     for name, mk in library.BENCHES.items():
+        if benches is not None and name not in benches:
+            continue
         bench = mk()
         g = bench.graph
         k = 20 if name == "fibonacci" else k_tokens

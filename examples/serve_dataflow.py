@@ -1,0 +1,67 @@
+"""Continuous-batching dataflow serving, end to end.
+
+A mixed-length workload (many short requests + a few long ones) on one
+block-fused fabric, served two ways:
+
+1. wave batching (`DataflowEngine.run_batch`, PR 1): every group of B
+   requests starts together and waits for its slowest member;
+2. the continuous-batching `DataflowServer`: per-slot quiescence
+   detection, mid-flight refill from the queue, free slots clock-gated
+   out of the fabric — short requests stream through while long ones
+   keep their slots.
+
+Results are bit-identical either way (and to solo runs); what changes
+is requests/s and queue wait.
+
+Run: PYTHONPATH=src python examples/serve_dataflow.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import library
+from repro.serve.dataflow_server import DataflowServer, cached_engine
+
+SLOTS, K = 4, 16
+bench = library.fibonacci_graph()
+
+# deterministic mixed-length trace: fib(40) "long" jobs every 4th
+# request, fib(1..3) "short" jobs in between
+lens = [40 if i % 4 == 0 else 1 + i % 3 for i in range(12)]
+feeds = [bench.make_feeds(n) for n in lens]
+print("workload: fib(n) for n =", lens)
+
+eng = cached_engine(bench.graph, backend="xla", block_cycles=K)
+
+# -- wave batching -----------------------------------------------------------
+t0 = time.perf_counter()
+wave = []
+for i in range(0, len(feeds), SLOTS):
+    wave.extend(eng.run_batch(feeds[i:i + SLOTS]))
+wave_s = time.perf_counter() - t0
+print(f"\nwave batching:       {len(feeds) / wave_s:7.1f} req/s "
+      f"(each wave waits for its slowest member)")
+
+# -- continuous batching -----------------------------------------------------
+srv = DataflowServer(bench.graph, slots=SLOTS, block_cycles=K, engine=eng)
+t0 = time.perf_counter()
+for f in feeds:
+    srv.submit(f)
+results = sorted(srv.drain(), key=lambda r: r.uid)
+cont_s = time.perf_counter() - t0
+print(f"continuous batching: {len(feeds) / cont_s:7.1f} req/s "
+      f"({srv.block} block dispatches, {srv.admission_rounds} admission "
+      f"rounds)")
+
+print("\nuid  fib(n)      cycles  slot  wait(blocks)  residency(blocks)")
+for r, w, n in zip(results, wave, lens):
+    m = r.metrics
+    assert int(np.asarray(r.engine.outputs["fibo"])) == \
+        int(np.asarray(w.outputs["fibo"]))          # bit-identical to waves
+    assert int(np.asarray(r.engine.outputs["fibo"])) == \
+        int(bench.reference(n))
+    print(f"{r.uid:3d}  {int(np.asarray(r.engine.outputs['fibo'])):10d}"
+          f"  {r.engine.cycles:6d}  {m.slot:4d}  {m.queue_wait_blocks:12d}"
+          f"  {m.residency_blocks:17d}")
+print("\nshort requests finished in 1-2 blocks without waiting for the "
+      "fib(40) jobs\nriding the neighbouring slots — no wave barrier.")

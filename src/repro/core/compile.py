@@ -242,6 +242,9 @@ def compile_graph(graph: Graph, token_shape=(), dtype=jnp.int32,
     EngineResult`` (plus a ``.engine`` attribute exposing
     ``run_batch``), so benches and tests drive every executor through
     one entry point."""
+    if block_cycles < 1:
+        raise ValueError(
+            f"block_cycles must be >= 1, got {block_cycles}")
     if backend != "auto":
         from repro.core.engine import DataflowEngine
         eng = DataflowEngine(graph, token_shape, dtype, max_cycles,

@@ -124,6 +124,80 @@ class EngineResult:
     dispatches: int | None = None   # device dispatches used (if tracked)
 
 
+@dataclasses.dataclass
+class SlotState:
+    """Resumable state of B fabric *slots* (continuous batching).
+
+    A slot is one stream's worth of arc registers, feed pointers, and
+    output accumulators riding the shared fabric.  Unlike
+    :meth:`DataflowEngine.run_batch` (wave batching: all B streams start
+    and finish together), slots have independent lifecycles: a quiesced
+    slot can be harvested and refilled with a new request's feed stream
+    while the other slots keep running — see
+    :class:`repro.serve.dataflow_server.DataflowServer`.
+
+    Device arrays (jnp, int32; leading axis = B slots):
+      fv[B, n_in, L], fl[B, n_in]   packed feed streams (L grows on
+                                    demand, power-of-two, to bound
+                                    recompiles)
+      full/val[B, A2]               arc registers
+      ptr[B, n_in]                  per-arc feed pointers
+      out_last/out_count[B, n_out]  output-bus accumulators
+
+    Host arrays (numpy; the per-slot clock):
+      active[B]     1 while a request occupies the slot (gates the
+                    kernel's feed/fire/drain — inactive slots are
+                    skipped, not stepped)
+      base[B]       slot-local cycles simulated so far
+      last[B]       slot-local cycle of last progress
+      fired[B]      node firings of the resident request
+      quiesced[B]   latest block had an idle tail (idle is absorbing,
+                    so the resident request is finished)
+      dispatches[B] block dispatches the resident request has ridden
+    """
+    fv: object
+    fl: object
+    full: object
+    val: object
+    ptr: object
+    out_last: object
+    out_count: object
+    active: np.ndarray
+    base: np.ndarray
+    last: np.ndarray
+    fired: np.ndarray
+    quiesced: np.ndarray
+    dispatches: np.ndarray
+    active_dev: object = None   # device mirror of `active` (refreshed on
+                                # admission/harvest, not per block)
+
+    @property
+    def slots(self) -> int:
+        return int(self.active.shape[0])
+
+    def free_slots(self) -> list[int]:
+        return [b for b in range(self.slots) if not self.active[b]]
+
+    def quiesced_slots(self) -> list[int]:
+        return [b for b in range(self.slots)
+                if self.active[b] and self.quiesced[b]]
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+def _slot_reset(fv, fl, full, val, ptr, out_last, out_count, mask,
+                fv_rows, fl_rows, full0, val0):
+    """Reset the masked slots to fresh initial state + new feed streams
+    in ONE fused dispatch (an admission round, not one call per slot)."""
+    m1 = mask[:, None]
+    return (jnp.where(mask[:, None, None], fv_rows, fv),
+            jnp.where(m1, fl_rows, fl),
+            jnp.where(m1, full0[None], full),
+            jnp.where(m1, val0[None], val),
+            jnp.where(m1, 0, ptr),
+            jnp.where(m1, 0, out_last),
+            jnp.where(m1, 0, out_count))
+
+
 def pack_feeds(input_arcs, feeds, token_shape=(), dtype=np.int32,
                pad_rows: int | None = None, min_len: int = 1):
     """Dense (feed_vals[n_in, L, *ts], feed_len[n_in]) from an arc->stream
@@ -190,17 +264,26 @@ class DataflowEngine:
         self.backend = backend
         self.block_cycles = int(block_cycles)
         self.p = _plan(graph)
+        self._slot_steps: dict[int, object] = {}
+        self._tables = None
         if backend == "pallas":
             if self.token_shape != () or self.dtype != jnp.int32:
                 raise ValueError(
                     "pallas backend supports scalar int32 tokens only")
-            from repro.kernels.dataflow_fire import block_plan_arrays
-            self._tables = block_plan_arrays(graph)
+            self._tables = self._block_tables()
             self._steps: dict[tuple[int, bool], object] = {}
         else:
             self._run = jax.jit(self._run_impl,
                                 static_argnames=("max_cycles",))
             self._vruns: dict[int, object] = {}
+
+    def _block_tables(self):
+        """Gather-layout node/arc/environment tables (built lazily for
+        the xla backend, eagerly for pallas)."""
+        if self._tables is None:
+            from repro.kernels.dataflow_fire import block_plan_arrays
+            self._tables = block_plan_arrays(self.graph)
+        return self._tables
 
     # -- public ---------------------------------------------------------
     def run(self, feeds: Mapping[str, object] | None = None,
@@ -232,7 +315,9 @@ class DataflowEngine:
         max_cycles = max_cycles or self.max_cycles
         feeds_batch = list(feeds_batch)
         if not feeds_batch:
-            return []
+            raise ValueError(
+                "run_batch: feeds_batch is empty — pass at least one "
+                "feed dict (use run() for a single stream)")
         if self.backend == "reference":
             return [run_reference(self.graph, f, self.token_shape,
                                   np.dtype(str(self.dtype)), max_cycles)
@@ -270,6 +355,191 @@ class DataflowEngine:
             counts={a: int(out_count[i]) for i, a in enumerate(out_arcs)},
             cycles=cycles, fired=fired, dispatches=dispatches)
 
+    # -- resumable slot API (continuous batching) ------------------------
+    #
+    # Lifecycle: init_state(B) -> all slots free; reset_slots() admits
+    # requests into free slots; step_block() advances every *active*
+    # slot by exactly block_cycles fabric cycles in one dispatch
+    # (inactive slots are clock-gated out of feed/fire/drain);
+    # harvest() extracts finished results and frees the slots.  Because
+    # admissions happen only at block boundaries and each slot carries
+    # its own cycle clock, a request's result is bit-identical to
+    # running it alone via run() — see DESIGN.md §7.
+    def _check_slot_api(self):
+        if self.backend == "reference":
+            raise ValueError("the resumable slot API needs a device "
+                             "backend (xla or pallas), not 'reference'")
+        if self.token_shape != () or self.dtype != jnp.int32:
+            raise ValueError("the resumable slot API supports scalar "
+                             "int32 tokens only")
+
+    def _state0_rows(self):
+        """(full0[A2], val0[A2]) int32 rows of a freshly-reset slot."""
+        p = self.p
+        full = np.zeros((p["A"] + 2,), np.int32)
+        val = np.zeros((p["A"] + 2,), np.int32)
+        full[p["FULL_PAD"]] = 1
+        for a, v in self.graph.consts.items():
+            full[p["aidx"][a]] = 1
+            val[p["aidx"][a]] = int(v)
+        return full, val
+
+    def init_state(self, slots: int) -> SlotState:
+        """Fresh B-slot state, every slot free (active == 0)."""
+        self._check_slot_api()
+        if slots < 1:
+            raise ValueError("slots must be >= 1")
+        p = self.p
+        B = int(slots)
+        n_in = max(len(p["input_arcs"]), 1)
+        n_out = max(len(p["output_arcs"]), 1)
+        full0, val0 = self._state0_rows()
+        z64 = lambda: np.zeros((B,), np.int64)
+        return SlotState(
+            fv=jnp.zeros((B, n_in, 1), jnp.int32),
+            fl=jnp.zeros((B, n_in), jnp.int32),
+            full=jnp.asarray(np.broadcast_to(full0, (B, full0.shape[0]))
+                             .copy()),
+            val=jnp.asarray(np.broadcast_to(val0, (B, val0.shape[0]))
+                            .copy()),
+            ptr=jnp.zeros((B, n_in), jnp.int32),
+            out_last=jnp.zeros((B, n_out), jnp.int32),
+            out_count=jnp.zeros((B, n_out), jnp.int32),
+            active=np.zeros((B,), np.int32), base=z64(), last=z64(),
+            fired=z64(), quiesced=np.zeros((B,), bool), dispatches=z64(),
+            active_dev=jnp.zeros((B,), jnp.int32))
+
+    def _slot_step(self, n_cycles: int):
+        """Jitted masked batched block step (backend-appropriate)."""
+        if self.backend == "pallas":
+            return self._pallas_step(n_cycles, True)
+        step = self._slot_steps.get(n_cycles)
+        if step is None:
+            from repro.kernels import ref as _kref
+            tables = self._block_tables()
+            fn = functools.partial(_kref.fire_block_masked_ref, tables,
+                                   n_cycles=n_cycles)
+            step = jax.jit(jax.vmap(fn))
+            self._slot_steps[n_cycles] = step
+        return step
+
+    def reset_slots(self, state: SlotState, slot_ids,
+                    new_feeds) -> SlotState:
+        """Admit one request per slot id: fresh arc registers + the new
+        feed stream, in one fused dispatch for the whole round.  Slots
+        must be free (never-used or harvested); everything else keeps
+        its state untouched.
+
+        MOVE semantics: the input state's device buffers are donated to
+        the fused reset dispatch, so ``state`` (and any older SlotState
+        sharing its buffers) must not be used again on backends that
+        honor donation — always continue from the returned state."""
+        self._check_slot_api()
+        slot_ids = list(slot_ids)
+        new_feeds = list(new_feeds)
+        if len(slot_ids) != len(new_feeds):
+            raise ValueError(f"{len(slot_ids)} slot ids but "
+                             f"{len(new_feeds)} feed dicts")
+        if not slot_ids:
+            return state
+        busy = [b for b in slot_ids if state.active[b]]
+        if busy:
+            raise ValueError(f"slots {busy} still hold unharvested "
+                             "requests (harvest before refilling)")
+        p = self.p
+        B = state.slots
+        packed = [pack_feeds(p["input_arcs"], f, (), np.int32, pad_rows=1)
+                  for f in new_feeds]
+        L = state.fv.shape[2]
+        need = max((fv.shape[1] for fv, _ in packed), default=1)
+        if need > L:        # grow the stream buffer (pow2 bounds retraces)
+            L = 1 << (int(need) - 1).bit_length()
+            state = dataclasses.replace(
+                state, fv=jnp.pad(state.fv,
+                                  ((0, 0), (0, 0), (0, L - state.fv.shape[2]))))
+        n_in = state.fv.shape[1]
+        mask = np.zeros((B,), bool)
+        fv_rows = np.zeros((B, n_in, L), np.int32)
+        fl_rows = np.zeros((B, n_in), np.int32)
+        for b, (fv, fl) in zip(slot_ids, packed):
+            mask[b] = True
+            fv_rows[b, :, :fv.shape[1]] = fv
+            fl_rows[b] = fl
+        full0, val0 = self._state0_rows()
+        fv_, fl_, full, val, ptr, out_last, out_count = _slot_reset(
+            state.fv, state.fl, state.full, state.val, state.ptr,
+            state.out_last, state.out_count, jnp.asarray(mask),
+            jnp.asarray(fv_rows), jnp.asarray(fl_rows),
+            jnp.asarray(full0), jnp.asarray(val0))
+        active = state.active.copy()
+        for host in (base := state.base.copy(), last := state.last.copy(),
+                     fired := state.fired.copy(),
+                     disp := state.dispatches.copy()):
+            host[slot_ids] = 0
+        quiesced = state.quiesced.copy()
+        active[slot_ids] = 1
+        quiesced[slot_ids] = False
+        return SlotState(fv_, fl_, full, val, ptr, out_last, out_count,
+                         active, base, last, fired, quiesced, disp,
+                         active_dev=jnp.asarray(active))
+
+    def step_block(self, state: SlotState,
+                   n_cycles: int | None = None) -> SlotState:
+        """Advance every active slot by ``n_cycles`` (default
+        ``block_cycles``) fabric cycles in ONE device dispatch; free
+        slots are clock-gated out.  Per-slot clocks (base/last/fired)
+        advance on the host; a slot whose block had an idle tail is
+        marked ``quiesced`` (idle is absorbing — the request is done)."""
+        self._check_slot_api()
+        nb = self.block_cycles if n_cycles is None else int(n_cycles)
+        if nb < 1:
+            raise ValueError("n_cycles must be >= 1")
+        if not state.active.any():
+            return state
+        step = self._slot_step(nb)
+        active_dev = state.active_dev if state.active_dev is not None \
+            else jnp.asarray(state.active)
+        *dev, f, lp = step(state.fv, state.fl, state.full, state.val,
+                           state.ptr, state.out_last, state.out_count,
+                           active_dev)
+        f, lp = jax.device_get((f, lp))      # one host sync per block
+        f = np.asarray(f).reshape(state.slots)
+        lp = np.asarray(lp).reshape(state.slots)
+        fired = state.fired + f
+        last = np.where(lp > 0, state.base + lp, state.last)
+        base = state.base + np.where(state.active > 0, nb, 0)
+        quiesced = np.where(state.active > 0, lp < nb, state.quiesced)
+        disp = state.dispatches + (state.active > 0)
+        return SlotState(state.fv, state.fl, *dev, state.active.copy(),
+                         base, last, fired, quiesced, disp,
+                         active_dev=active_dev)
+
+    def harvest(self, state: SlotState, slot_ids
+                ) -> tuple[SlotState, list[EngineResult]]:
+        """Extract the resident requests' EngineResults from the given
+        (active) slots and free them.  Results follow the same
+        accounting as run(): cycles = last progress cycle + 1 trailing
+        idle cycle, capped at max_cycles; dispatches = blocks the
+        request rode."""
+        self._check_slot_api()
+        slot_ids = list(slot_ids)
+        idle = [b for b in slot_ids if not state.active[b]]
+        if idle:
+            raise ValueError(f"slots {idle} are free — nothing to harvest")
+        out_last, out_count = jax.device_get((state.out_last,
+                                              state.out_count))
+        results = [self._result_from_state(
+            out_last[b], out_count[b],
+            int(min(state.last[b] + 1, self.max_cycles)),
+            int(state.fired[b]), int(state.dispatches[b]))
+            for b in slot_ids]
+        active = state.active.copy()
+        quiesced = state.quiesced.copy()
+        active[slot_ids] = 0
+        quiesced[slot_ids] = False
+        return dataclasses.replace(state, active=active, quiesced=quiesced,
+                                   active_dev=jnp.asarray(active)), results
+
     # -- pallas backend (host loop over fused blocks) --------------------
     def _pallas_step(self, n_cycles: int, batched: bool):
         """Jitted block step for a given size, compiled lazily and cached
@@ -287,15 +557,9 @@ class DataflowEngine:
 
     def _pallas_state0(self, batch: int | None = None):
         p = self.p
-        A2 = p["A"] + 2
         n_in = max(len(p["input_arcs"]), 1)
         n_out = max(len(p["output_arcs"]), 1)
-        full = np.zeros((A2,), np.int32)
-        val = np.zeros((A2,), np.int32)
-        full[p["FULL_PAD"]] = 1
-        for a, v in self.graph.consts.items():
-            full[p["aidx"][a]] = 1
-            val[p["aidx"][a]] = int(v)
+        full, val = self._state0_rows()
         state = (full, val, np.zeros((n_in,), np.int32),
                  np.zeros((n_out,), np.int32), np.zeros((n_out,), np.int32))
         if batch is not None:
@@ -336,9 +600,11 @@ class DataflowEngine:
         base = dispatches = 0
         last = np.zeros((B,), np.int64)
         fired = np.zeros((B,), np.int64)
+        ones = jnp.ones((B,), jnp.int32)
         while True:
             nb = min(K, max_cycles - base)  # never simulate past the cap
-            *state, f, lp = self._pallas_step(nb, True)(fv, fl, *state)
+            *state, f, lp = self._pallas_step(nb, True)(fv, fl, *state,
+                                                        ones)
             state = tuple(state)
             dispatches += 1
             fired += np.asarray(f)[:, 0]

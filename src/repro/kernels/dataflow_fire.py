@@ -297,12 +297,21 @@ def _block_kernel(n_cycles, *refs):
 
 def _batched_block_kernel(n_cycles, *refs):
     """Same as _block_kernel but every non-table ref has a leading
-    batch-block dim of 1 (grid over B selects the stream)."""
-    ins, outs = refs[:19], refs[19:]
+    batch-block dim of 1 (grid over B selects the stream), plus a
+    per-stream ``active`` flag: an inactive slot's block is skipped
+    entirely (state passes through, fired/last_prog report 0) — the
+    per-slot clock that lets a continuous-batching server freeze
+    quiesced/empty slots instead of burning K cycles on them."""
+    ins, outs = refs[:20], refs[20:]
     tab = {k: r[...] for k, r in zip(_TABLE_KEYS, ins[:12])}
     feed_vals, feed_len = ins[12][0], ins[13][0]
     state = [r[0] for r in ins[14:19]]
-    res = _block_body(tab, feed_vals, feed_len, *state, n_cycles=n_cycles)
+    active = ins[19][0] != 0
+    res = jax.lax.cond(
+        active,
+        lambda: _block_body(tab, feed_vals, feed_len, *state,
+                            n_cycles=n_cycles),
+        lambda: (*state, jnp.int32(0), jnp.int32(0)))
     for r, v in zip(outs[:5], res[:5]):
         r[...] = v[None]
     outs[5][0, 0] = res[5]
@@ -342,15 +351,20 @@ def fire_block_pallas(tables, feed_vals, feed_len, full, val, ptr,
 
 def fire_block_batched_pallas(tables, feed_vals, feed_len, full, val, ptr,
                               out_last, out_count, *, n_cycles: int,
-                              interpret=None):
+                              active=None, interpret=None):
     """Batched block step: grid=(B,) — B independent streams through one
     fabric in a single dispatch.  All state/feed arrays carry a leading
     batch axis; the node/arc tables are shared (broadcast) across the
-    grid.  Returns the same tuple as fire_block_pallas with a leading
-    B axis (fired/last_prog: [B, 1])."""
+    grid.  ``active`` (int32[B], default all-ones) is the per-stream
+    clock gate: slots with active==0 skip the whole block (state frozen,
+    fired/last_prog = 0), so a serving layer can park quiesced slots
+    without a global barrier.  Returns the same tuple as
+    fire_block_pallas with a leading B axis (fired/last_prog: [B, 1])."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     B = full.shape[0]
+    if active is None:
+        active = jnp.ones((B,), jnp.int32)
     tabs = [jnp.asarray(tables[k]) for k in _TABLE_KEYS]
     state = [full, val, ptr, out_last, out_count]
 
@@ -365,8 +379,9 @@ def fire_block_batched_pallas(tables, feed_vals, feed_len, full, val, ptr,
         functools.partial(_batched_block_kernel, n_cycles),
         grid=(B,),
         in_specs=[_whole(x) for x in tabs]
-        + [row(x) for x in (feed_vals, feed_len, *state)],
+        + [row(x) for x in (feed_vals, feed_len, *state)]
+        + [pl.BlockSpec((1,), lambda b: (b,))],
         out_specs=[row(s) for s in out_sd],
         out_shape=out_sd,
         interpret=interpret,
-    )(*tabs, feed_vals, feed_len, *state)
+    )(*tabs, feed_vals, feed_len, *state, active)

@@ -52,18 +52,30 @@ def make_block_step(graph, n_cycles: int, batched: bool = False,
         -> (full', val', ptr', out_last', out_count', fired[1],
             last_prog[1])
     With batched=True every array gains a leading B axis (grid over
-    streams inside the kernel; one dispatch for all B).  Pass a prior
-    call's `tables` to reuse the plan instead of rebuilding it."""
+    streams inside the kernel; one dispatch for all B) and the step
+    takes a trailing ``active`` int32[B] clock gate: slots with
+    active == 0 skip the block entirely (state frozen, fired/last_prog
+    0) — pass ``jnp.ones((B,), jnp.int32)`` for the plain wave-batch
+    semantics.  Pass a prior call's `tables` to reuse the plan instead
+    of rebuilding it."""
     import jax.numpy as jnp
     if tables is None:
         tables = block_plan_arrays(graph)
     jt = {k: jnp.asarray(v) for k, v in tables.items() if k != "plan"}
-    call = fire_block_batched_pallas if batched else fire_block_pallas
 
-    @jax.jit
-    def step(feed_vals, feed_len, full, val, ptr, out_last, out_count):
-        return call(jt, feed_vals, feed_len, full, val, ptr, out_last,
-                    out_count, n_cycles=n_cycles)
+    if batched:
+        @jax.jit
+        def step(feed_vals, feed_len, full, val, ptr, out_last, out_count,
+                 active):
+            return fire_block_batched_pallas(
+                jt, feed_vals, feed_len, full, val, ptr, out_last,
+                out_count, n_cycles=n_cycles, active=active)
+    else:
+        @jax.jit
+        def step(feed_vals, feed_len, full, val, ptr, out_last, out_count):
+            return fire_block_pallas(
+                jt, feed_vals, feed_len, full, val, ptr, out_last,
+                out_count, n_cycles=n_cycles)
 
     return tables, step
 

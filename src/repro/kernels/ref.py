@@ -37,3 +37,19 @@ def fire_block_ref(tables, feed_vals, feed_len, full, val, ptr, out_last,
     return _block_body(tab, jnp.asarray(feed_vals), jnp.asarray(feed_len),
                        full, val, ptr, out_last, out_count,
                        n_cycles=n_cycles)
+
+
+def fire_block_masked_ref(tables, feed_vals, feed_len, full, val, ptr,
+                          out_last, out_count, active, *, n_cycles: int):
+    """Single-stream block step gated by a scalar ``active`` flag — the
+    pure-jnp mirror of the batched kernel's per-stream clock gate.  When
+    active == 0 the state passes through untouched and fired/last_prog
+    report 0.  vmapping this over a leading B axis gives the xla
+    backend's slot stepper (a `where`-select per row; the Pallas kernel
+    genuinely skips the block via `lax.cond`)."""
+    res = fire_block_ref(tables, feed_vals, feed_len, full, val, ptr,
+                         out_last, out_count, n_cycles=n_cycles)
+    keep = active != 0
+    old = (full, val, ptr, out_last, out_count)
+    kept = tuple(jnp.where(keep, n, o) for n, o in zip(res[:5], old))
+    return (*kept, jnp.where(keep, res[5], 0), jnp.where(keep, res[6], 0))

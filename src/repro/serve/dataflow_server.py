@@ -1,0 +1,246 @@
+"""Continuous-batching dataflow serving: per-slot stream lifecycle.
+
+The paper's fabric serves one token stream; ``DataflowEngine.run_batch``
+(PR 1) serves B streams as a *wave* — all admitted together, the
+dispatch loop running until the slowest stream quiesces, so short
+requests idle in their slots.  This module removes the wave barrier:
+
+* a :class:`DataflowServer` owns a FIFO request queue and B live
+  *slots* on one block-fused fabric (the engine's resumable slot API,
+  DESIGN.md §7);
+* after each K-cycle block it detects per-slot quiescence (idle block
+  tail — idle is absorbing), harvests finished requests, and refills
+  those slots from the queue *while the other slots keep running*;
+* free/quiesced slots are clock-gated out of feed/fire/drain by the
+  per-stream active mask in ``fire_block_batched_pallas`` (the
+  "per-row cache clock" serve/engine.py flags as future work for the
+  LM path).
+
+This is the serving analogue of a circuit-switched reconfigurable
+fabric multiplexing independent stream computations through shared
+operators with per-stream flow control (Li et al., arXiv:1310.3356):
+the node/arc tables are the shared operator array, a slot is a
+circuit, and admission is reconfiguration-free because every request
+of a graph signature reuses one compiled plan.
+
+Determinism: admissions happen only at block boundaries and each slot
+carries its own cycle clock, so every request's
+:class:`~repro.core.engine.EngineResult` is bit-identical to running
+it alone via ``DataflowEngine.run`` — regardless of what rides the
+other slots or of admission order (property-tested in
+tests/test_dataflow_server.py).
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+from typing import Iterable, Mapping
+
+from repro.core import asm
+from repro.core.engine import BACKENDS, DataflowEngine
+from repro.core.graph import Graph
+from repro.serve.types import Request, RequestMetrics, Result
+
+# ---------------------------------------------------------------------------
+# Compiled-plan cache: many requests, one fabric
+# ---------------------------------------------------------------------------
+_ENGINE_CACHE: "collections.OrderedDict[tuple, DataflowEngine]" = \
+    collections.OrderedDict()
+_ENGINE_CACHE_MAX = 64      # LRU bound: a long-running service sees a
+                            # finite fabric vocabulary; evicted engines
+                            # stay alive wherever still referenced
+CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def graph_signature(graph: Graph) -> str:
+    """Canonical text of a fabric (assembler emission: consts + node
+    table with arc labels).  Two graphs with equal signatures compile
+    to identical plans, so their requests can share one engine."""
+    return asm.emit(graph)
+
+
+def cached_engine(graph: Graph, *, backend: str = "xla",
+                  block_cycles: int = 16,
+                  max_cycles: int = 100_000) -> DataflowEngine:
+    """Engine for (graph signature, backend, K) — compiled once, shared
+    by every server/request that presents the same fabric (the cache
+    key hashes the signature, not the graph object, so structurally
+    equal graphs share)."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+    key = (hashlib.sha256(graph_signature(graph).encode()).hexdigest(),
+           backend, int(block_cycles), int(max_cycles))
+    eng = _ENGINE_CACHE.get(key)
+    if eng is None:
+        CACHE_STATS["misses"] += 1
+        eng = DataflowEngine(graph, backend=backend,
+                             block_cycles=block_cycles,
+                             max_cycles=max_cycles)
+        _ENGINE_CACHE[key] = eng
+        while len(_ENGINE_CACHE) > _ENGINE_CACHE_MAX:
+            _ENGINE_CACHE.popitem(last=False)
+    else:
+        CACHE_STATS["hits"] += 1
+        _ENGINE_CACHE.move_to_end(key)
+    return eng
+
+
+def clear_engine_cache() -> None:
+    _ENGINE_CACHE.clear()
+    CACHE_STATS["hits"] = CACHE_STATS["misses"] = 0
+
+
+# ---------------------------------------------------------------------------
+# The server
+# ---------------------------------------------------------------------------
+class DataflowServer:
+    """Request-level continuous batching over one block-fused fabric.
+
+    Usage::
+
+        srv = DataflowServer(graph, slots=8, block_cycles=16,
+                             backend="pallas")
+        srv.submit(feeds_a)            # returns uid
+        srv.submit(Request(uid=7, feeds=feeds_b))
+        done = srv.step()              # one K-cycle block; may finish 0+
+        rest = srv.drain()             # run until queue + slots empty
+
+    ``step()`` is the scheduler heartbeat: admit from the queue into
+    free slots, advance every active slot by one K-cycle block (one
+    device dispatch), harvest slots whose block had an idle tail.
+    Requests that hit the engine's ``max_cycles`` safety cap are
+    force-harvested (truncated) rather than wedging their slot.
+    """
+
+    def __init__(self, graph: Graph, slots: int = 8,
+                 block_cycles: int = 16, backend: str = "xla",
+                 max_cycles: int = 100_000,
+                 engine: DataflowEngine | None = None):
+        if slots < 1:
+            raise ValueError("slots must be >= 1")
+        if engine is not None:
+            # an explicit engine wins over backend/block_cycles/max_cycles
+            # (block size is a perf knob, never a semantics one), but it
+            # must serve THIS fabric — a mismatched plan would silently
+            # produce another graph's results
+            if graph_signature(engine.graph) != graph_signature(graph):
+                raise ValueError(
+                    "engine= was compiled for a different fabric "
+                    f"({engine.graph.name!r}, not {graph.name!r})")
+            self.engine = engine
+        else:
+            self.engine = cached_engine(
+                graph, backend=backend, block_cycles=block_cycles,
+                max_cycles=max_cycles)
+        self.state = self.engine.init_state(slots)
+        self.slots = slots
+        self.queue: collections.deque[Request] = collections.deque()
+        self.block = 0            # server block clock (dispatches issued)
+        self.admission_rounds = 0  # fused reset dispatches issued
+        self._queued_at: dict[int, int] = {}     # uid -> block at submit
+        self._resident: dict[int, tuple[Request, int]] = {}  # slot -> (req, admitted)
+        self._auto_uid = 0
+
+    # -- admission ------------------------------------------------------
+    def submit(self, request) -> int:
+        """Enqueue a request (a :class:`Request` or a bare feeds dict);
+        returns its uid.  uids must be unique among in-flight requests —
+        auto-assigned ones skip any the caller has taken."""
+        if isinstance(request, Mapping) or request is None:
+            while self._auto_uid + 1 in self._queued_at:
+                self._auto_uid += 1
+            self._auto_uid += 1
+            request = Request(uid=self._auto_uid, feeds=dict(request or {}))
+        if not isinstance(request, Request):
+            raise TypeError(f"submit wants a Request or feeds dict, "
+                            f"got {type(request).__name__}")
+        if request.feeds is None:
+            raise ValueError(f"request {request.uid} has no feeds — the "
+                             "dataflow server serves feed-stream requests")
+        if request.uid in self._queued_at:
+            raise ValueError(f"uid {request.uid} is already in flight")
+        # fail fast on feeds the fabric cannot take: admission batches
+        # several requests into one fused reset, so a bad request must
+        # be rejected here, not poison its co-batched neighbours there
+        unknown = set(request.feeds) - set(self.engine.p["input_arcs"])
+        if unknown:
+            raise ValueError(f"request {request.uid}: feeds for "
+                             f"non-input arcs: {sorted(unknown)}")
+        self.queue.append(request)
+        self._queued_at[request.uid] = self.block
+        return request.uid
+
+    def _admit(self) -> None:
+        free = self.state.free_slots()
+        batch: list[tuple[int, Request]] = []
+        while free and self.queue:
+            batch.append((free.pop(0), self.queue.popleft()))
+        if batch:
+            self.state = self.engine.reset_slots(
+                self.state, [b for b, _ in batch],
+                [r.feeds for _, r in batch])
+            self.admission_rounds += 1
+            for b, r in batch:
+                self._resident[b] = (r, self.block)
+
+    # -- heartbeat ------------------------------------------------------
+    def step(self) -> list[Result]:
+        """Evict cap-exhausted requests, admit, advance one block,
+        harvest.  Returns the requests that finished this block
+        (possibly none).
+
+        A heartbeat's block never lets any slot cross the engine's
+        ``max_cycles`` cap: it is shortened to the smallest remaining
+        per-slot budget when one nears the cap (block partitioning does
+        not change cycle semantics — property-tested across K), so even
+        a truncated request simulates exactly ``max_cycles`` cycles,
+        bit-identical to a solo ``run``."""
+        cap = self.engine.max_cycles
+        results = self._harvest_slots(
+            [b for b in sorted(self._resident)
+             if not self.state.quiesced[b] and self.state.base[b] >= cap])
+        self._admit()
+        if not self._resident:
+            return results
+        self.state = self.engine.step_block(self.state, n_cycles=min(
+            self.engine.block_cycles,
+            min(cap - int(self.state.base[b]) for b in self._resident)))
+        self.block += 1
+        return results + self._harvest_slots(self.state.quiesced_slots())
+
+    def _harvest_slots(self, done: list[int]) -> list[Result]:
+        if not done:
+            return []
+        self.state, engine_results = self.engine.harvest(self.state, done)
+        results = []
+        for b, er in zip(done, engine_results):
+            req, admitted = self._resident.pop(b)
+            queued = self._queued_at.pop(req.uid, admitted)
+            results.append(Result(
+                uid=req.uid, engine=er,
+                metrics=RequestMetrics(
+                    slot=b, queued_block=queued, admitted_block=admitted,
+                    finished_block=self.block,
+                    queue_wait_blocks=admitted - queued,
+                    residency_blocks=er.dispatches,
+                    residency_cycles=er.cycles,
+                    tokens_out=sum(er.counts.values()))))
+        return results
+
+    def drain(self) -> list[Result]:
+        """Step until the queue and every slot are empty."""
+        out: list[Result] = []
+        while self.queue or self._resident:
+            out.extend(self.step())
+        return out
+
+    def run(self, requests: Iterable) -> list[Result]:
+        """Serve a closed workload: submit everything, drain, return
+        results sorted by uid."""
+        for r in requests:
+            self.submit(r)
+        return sorted(self.drain(), key=lambda r: r.uid)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue) + len(self._resident)

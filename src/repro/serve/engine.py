@@ -6,12 +6,13 @@ member hits EOS or its token budget.  The KV cache is wave-synchronous
 (one shared length scalar) — the greedy-batching analogue of the paper's
 static dataflow: a wave is one token occupying the fabric's arcs, and
 back-pressure (the full/empty bit) is the wave boundary.  Per-slot
-lengths/continuous batching would need a per-row cache clock; noted as
-future work in DESIGN.md.
+lengths/continuous batching would need a per-row cache clock — the
+dataflow serving path implements exactly that slot lifecycle
+(`repro.serve.dataflow_server`, DESIGN.md §7); porting it to the KV
+cache here remains future work.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Sequence
 
 import jax
@@ -19,21 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as tfm
+from repro.serve.types import Request, Result
 
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray          # [S] int32
-    max_new_tokens: int = 16
-    eos_id: int | None = None
-
-
-@dataclasses.dataclass
-class Result:
-    uid: int
-    tokens: np.ndarray          # generated ids
-    prompt_len: int
+__all__ = ["Request", "Result", "ServeEngine"]
 
 
 class ServeEngine:

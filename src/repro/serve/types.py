@@ -1,0 +1,69 @@
+"""Shared request/result vocabulary for both serving paths.
+
+The repo serves two kinds of traffic through one set of dataclasses:
+
+* **LM waves** (:class:`repro.serve.engine.ServeEngine`) — a request
+  carries a token ``prompt`` and decode budget; the result carries the
+  generated ``tokens``.
+* **Dataflow streams**
+  (:class:`repro.serve.dataflow_server.DataflowServer`) — a request
+  carries ``feeds`` (arc -> token-stream dict, the environment buses of
+  a fabric run); the result carries the fabric's
+  :class:`~repro.core.engine.EngineResult` plus admission/residency
+  metrics.
+
+One vocabulary means schedulers, traces, and metrics code can treat
+"requests in, results out" uniformly regardless of which engine is
+behind the queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.engine import EngineResult
+
+
+@dataclasses.dataclass
+class Request:
+    """One unit of admission-controlled work.
+
+    LM path fields: ``prompt`` / ``max_new_tokens`` / ``eos_id``.
+    Dataflow path field: ``feeds`` (arc -> [k] token stream).
+    """
+    uid: int
+    prompt: np.ndarray | None = None    # [S] int32 token ids (LM)
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    feeds: dict | None = None           # arc -> stream (dataflow)
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Per-request serving metrics, in deterministic block-clock units
+    (one unit = one K-cycle block dispatch of the serving fabric)."""
+    slot: int                 # slot the request rode
+    queued_block: int         # server block clock at submit()
+    admitted_block: int       # ... at slot admission
+    finished_block: int       # ... at harvest
+    queue_wait_blocks: int    # admitted - queued (time spent queued)
+    residency_blocks: int     # block dispatches while resident
+    residency_cycles: int     # fabric cycles the request ran
+    tokens_out: int           # tokens drained across all output arcs
+
+
+@dataclasses.dataclass
+class Result:
+    """What a serving engine hands back for one request.
+
+    LM path fields: ``tokens`` / ``prompt_len``.
+    Dataflow path fields: ``engine`` (the full
+    :class:`~repro.core.engine.EngineResult`, bit-identical to a solo
+    run) and ``metrics``.
+    """
+    uid: int
+    tokens: np.ndarray | None = None    # generated ids (LM)
+    prompt_len: int = 0
+    engine: EngineResult | None = None  # fabric result (dataflow)
+    metrics: RequestMetrics | None = None

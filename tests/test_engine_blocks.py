@@ -99,7 +99,8 @@ def test_batched_pallas_kernel_matches_vmap():
              jnp.zeros((B, n_in), jnp.int32),
              jnp.zeros((B, n_out), jnp.int32),
              jnp.zeros((B, n_out), jnp.int32))
-    got = bstep(fv, fl, *state)
+    active = jnp.ones((B,), jnp.int32)
+    got = bstep(fv, fl, *state, active)
     want = jax.vmap(
         lambda fv1, fl1, *s: ref.fire_block_ref(
             tables, fv1, fl1, *s, n_cycles=8))(fv, fl, *state)
