@@ -1,9 +1,12 @@
 """Benchmark driver — one section per paper table / report table.
 
-  table1_*   paper Table 1 analogue (6 dataflow benchmarks: resources +
+  table1_*   paper Table 1 analogue (dataflow benchmarks: resources +
              engine cycles + compiled throughput)
   engine_*   block-fused/batched engine executor sweep (also serialized
              to BENCH_dataflow.json for cross-PR perf tracking)
+  opt_*      graph-compiler optimization sweep: off vs spec vs full
+             across backends x K x B (BENCH_opt.json; --opt runs it
+             alone, --quick --opt is the CI smoke)
   kernel_*   Pallas kernel micro-benchmarks vs jnp references
   train_*    end-to-end reduced-config train-step timings (per family)
   roofline_* aggregated dry-run roofline terms (if records exist)
@@ -67,10 +70,40 @@ def dataflow_json(path: str | None = None) -> list[dict]:
     return recs
 
 
+def opt_json(path: str | None = None) -> list[dict]:
+    """Run the --opt/--no-opt optimization sweep (off vs spec vs full
+    across backends x K x B) and write BENCH_opt.json, so the
+    graph-compiler speedup is tracked across PRs alongside
+    BENCH_dataflow.json."""
+    from benchmarks import table1_dataflow
+
+    recs = table1_dataflow.opt_rows()
+    payload = dict(records=recs, summary=table1_dataflow.opt_summary(recs))
+    path = path or os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_opt.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    table1_dataflow.print_opt_csv(recs)
+    return recs
+
+
+def quick_opt() -> None:
+    """CI smoke for the optimization sweep: 2 benches, tiny workloads,
+    every level, no JSON (the committed BENCH_opt.json is a full-run
+    artifact) — keeps the specialized kernels + rewrite passes
+    exercised on every push."""
+    from benchmarks import table1_dataflow
+    recs = table1_dataflow.opt_rows(
+        Bs=(1, 2), Ks=(4,), reps=1, k_tokens=4, fib_iters=8,
+        benches=("fir", "fibonacci"))
+    table1_dataflow.print_opt_csv(recs)
+
+
 def main() -> None:
     from benchmarks import table1_dataflow, kernels_bench, roofline
     table1_dataflow.main()
     dataflow_json()
+    opt_json()
     kernels_bench.main()
     _train_steps()
     roofline.main()
@@ -95,4 +128,9 @@ if __name__ == "__main__":
     import sys
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))   # `benchmarks` importable from CLI
-    quick() if "--quick" in sys.argv else main()
+    if "--quick" in sys.argv:
+        quick_opt() if "--opt" in sys.argv else quick()
+    elif "--opt" in sys.argv:
+        opt_json()                     # the opt sweep alone
+    else:
+        main()

@@ -139,6 +139,112 @@ def backend_rows(Bs=(1, 8, 64), block=16, reps=3, k_tokens=8,
     return out
 
 
+def opt_rows(Bs=(1, 8), Ks=(4, 16), reps=7, k_tokens=64, fib_iters=300,
+             benches=None, backends=("xla", "pallas"),
+             levels=(False, "spec", "full")):
+    """--opt/--no-opt sweep (ISSUE 3): every optimization level across
+    backends x K x B, one JSON-able record per configuration.
+
+    Levels:
+      off  — the graph exactly as authored, dense ~20-way ALU
+             where-chain per cycle (the PR 1/2 engine).
+      spec — opcode-class-specialized plan only (DESIGN.md §8):
+             bucketed fire bodies over only the opcodes present;
+             bit-identical in every EngineResult field.
+      full — graph rewrite passes (constant folding, identity
+             elimination, DCE) + the specialized plan; fabrics shrink,
+             so simulated cycles may drop too.
+
+    Streams are long (k_tokens tokens / fib_iters loop iterations) so
+    per-cycle compute, not dispatch overhead, dominates; timings take
+    the best of ``reps`` to shed scheduler noise.  cycles_per_s is the
+    figure of merit: simulated fabric cycles per wall-clock second.
+    """
+    from repro.core.compile import compile_graph
+
+    out = []
+    for name, mk in library.BENCHES.items():
+        if benches is not None and name not in benches:
+            continue
+        bench = mk()
+        k = fib_iters if name == "fibonacci" else k_tokens
+        feeds = library.random_feeds(name, bench, k,
+                                     np.random.default_rng(0))
+        tok1 = library.tokens_out(name, k)
+        for be in backends:
+            for K in Ks:
+                for opt in levels:
+                    run = compile_graph(bench.graph, backend=be,
+                                        block_cycles=K, optimize=opt)
+                    eng = run.engine
+                    for B in Bs:
+                        if B == 1:
+                            call = lambda e=eng, f=feeds: e.run(f)
+                        else:
+                            fb = [library.random_feeds(
+                                name, bench, k, np.random.default_rng(b))
+                                for b in range(B)]
+                            call = lambda e=eng, f=fb: e.run_batch(f)
+                        res = call()    # warmup/compile
+                        rs = res if isinstance(res, list) else [res]
+                        ts = []
+                        for _ in range(reps):
+                            t0 = time.perf_counter()
+                            call()
+                            ts.append(time.perf_counter() - t0)
+                        us = float(min(ts)) * 1e6
+                        cyc = sum(r.cycles for r in rs)
+                        out.append(dict(
+                            name=name, backend=be, B=B, K=K,
+                            opt="off" if opt is False else opt,
+                            nodes=len(run.graph.nodes),
+                            us_per_call=round(us, 1),
+                            cycles_per_s=round(cyc / us * 1e6),
+                            tokens_per_s=round(B * tok1 / us * 1e6),
+                            dispatches=rs[0].dispatches,
+                            cycles=rs[0].cycles))
+    return out
+
+
+def opt_summary(recs, K=None, B=None):
+    """Per-backend win count at the canonical (K, B) point — largest K,
+    smallest B present in the records unless overridden: benches where
+    the best opt-on cycles/s beats opt-off."""
+    if not recs:
+        return []
+    K = max(r["K"] for r in recs) if K is None else K
+    B = min(r["B"] for r in recs) if B is None else B
+    rows = [r for r in recs if r["K"] == K and r["B"] == B]
+    summary = []
+    for be in sorted({r["backend"] for r in rows}):
+        wins = []
+        for name in sorted({r["name"] for r in rows}):
+            cfg = {r["opt"]: r["cycles_per_s"] for r in rows
+                   if r["backend"] == be and r["name"] == name}
+            if not cfg or "off" not in cfg:
+                continue
+            best = max(v for o, v in cfg.items() if o != "off")
+            if best > cfg["off"]:
+                wins.append(f"{name}:{best / cfg['off']:.2f}x")
+        summary.append(dict(backend=be, K=K, B=B, wins=len(wins),
+                            total=len({r["name"] for r in rows}),
+                            detail=wins))
+    return summary
+
+
+def print_opt_csv(recs):
+    for r in recs:
+        print(f"opt_{r['name']}_{r['backend']}_B{r['B']}_K{r['K']}_"
+              f"{r['opt']},{r['us_per_call']},"
+              f"cycles_per_s={r['cycles_per_s']};"
+              f"tokens_per_s={r['tokens_per_s']};"
+              f"nodes={r['nodes']};dispatches={r['dispatches']}")
+    for s in opt_summary(recs):
+        print(f"opt_summary_{s['backend']}_K{s['K']}_B{s['B']},0,"
+              f"opt_beats_off_on={s['wins']}/{s['total']}:"
+              f"{'+'.join(s['detail'])}")
+
+
 def print_backend_csv(recs):
     """One CSV line per executor record (shared with benchmarks/run.py)."""
     for r in recs:

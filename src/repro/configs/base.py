@@ -17,10 +17,6 @@ Shape sets (assignment): each architecture is paired with
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
-
-import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)

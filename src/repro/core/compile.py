@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import DECIDER_OPS, Graph, Op, PRIMITIVE_OPS
+from repro.core.graph import Graph, Op
 from repro.core.engine import EngineResult, _alu, pack_feeds
 
 
@@ -229,9 +229,13 @@ def compile_cyclic(graph: Graph, token_shape=(), dtype=jnp.int32,
     return run
 
 
+OPTIMIZE_LEVELS = (False, "spec", "full", True)
+BACKENDS_NOTE = "xla | pallas | reference"
+
+
 def compile_graph(graph: Graph, token_shape=(), dtype=jnp.int32,
                   max_cycles: int = 100_000, backend: str = "auto",
-                  block_cycles: int = 16):
+                  block_cycles: int = 16, optimize=False):
     """Dispatch a fabric to an executor.
 
     backend="auto" keeps the historical shape-directed choice: DAG ->
@@ -241,18 +245,56 @@ def compile_graph(graph: Graph, token_shape=(), dtype=jnp.int32,
     cycle-accurate block-fused engine callable ``run(feeds) ->
     EngineResult`` (plus a ``.engine`` attribute exposing
     ``run_batch``), so benches and tests drive every executor through
-    one entry point."""
+    one entry point.
+
+    optimize selects the compiler pipeline (DESIGN.md §8):
+      * ``False``  — run the graph exactly as authored;
+      * ``"spec"`` — opcode-class-specialized plan only: a pure layout
+        permutation, every EngineResult field bit-identical to the
+        unoptimized engine;
+      * ``True`` / ``"full"`` — graph rewrite passes (constant folding,
+        identity elimination, dead-node/arc elimination;
+        :func:`repro.core.passes.optimize_graph`) *then* the
+        specialized plan.  Rewrites shrink the fabric, so for fabrics
+        that quiesce the surviving output arcs drain bit-identical
+        values and token counts while ``cycles``/``fired`` may shrink.
+    The returned callable exposes the rewritten graph as ``.graph``
+    and the rewrite report as ``.report`` (None when no rewrites ran).
+    """
     if block_cycles < 1:
         raise ValueError(
             f"block_cycles must be >= 1, got {block_cycles}")
+    if optimize not in OPTIMIZE_LEVELS:
+        raise ValueError(f"optimize {optimize!r} not in {OPTIMIZE_LEVELS}")
+    if optimize == "spec" and backend == "auto":
+        # specialization is plan-level; the auto backends (trace-time
+        # unrolled SSA) have no plan, so "spec" would silently measure
+        # an unoptimized runner
+        raise ValueError(
+            'optimize="spec" needs an engine backend '
+            f'({BACKENDS_NOTE}); backend="auto" only supports the '
+            'rewrite pipeline (optimize="full"/True)')
+    report = None
+    if optimize in (True, "full"):
+        from repro.core import passes
+        graph, report = passes.optimize_graph(graph, dtype=np.dtype(
+            str(jnp.dtype(dtype))))
     if backend != "auto":
         from repro.core.engine import DataflowEngine
         eng = DataflowEngine(graph, token_shape, dtype, max_cycles,
-                             backend=backend, block_cycles=block_cycles)
+                             backend=backend, block_cycles=block_cycles,
+                             optimize=optimize is not False)
         run = lambda feeds, max_cycles=None: eng.run(feeds, max_cycles)
         run.engine = eng
+        run.graph = graph
+        run.report = report
         return run
     if graph.is_cyclic() or any(
             n.op in (Op.BRANCH, Op.NDMERGE) for n in graph.nodes):
-        return compile_cyclic(graph, token_shape, dtype, max_cycles)
-    return compile_dag_stream(graph, dtype)
+        run = compile_cyclic(graph, token_shape, dtype, max_cycles)
+    else:
+        fn = compile_dag_stream(graph, dtype)
+        run = lambda feeds: fn(feeds)   # jit fns reject new attributes
+    run.graph = graph
+    run.report = report
+    return run

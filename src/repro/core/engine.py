@@ -40,10 +40,44 @@ _MAX_IN = 3
 _MAX_OUT = 2
 
 
-def _plan(graph: Graph):
-    """Static (numpy) arrays describing the fabric."""
+def _plan(graph: Graph, optimize: bool = False):
+    """Static (numpy) arrays describing the fabric.
+
+    With ``optimize=True`` the plan is *opcode-class specialized*
+    (DESIGN.md §8): arcs are permuted into role order (inputs, outputs,
+    internal, consts) and nodes are permuted so that equal opcodes are
+    contiguous, with the per-class slice ranges recorded in
+    ``class_slices`` — the fire body can then unroll a static loop over
+    only the opcode classes present instead of evaluating the full ALU
+    ``where``-chain for every node.  The permutation is pure layout:
+    every node still fires against the same snapshot, so results are
+    bit-identical to the unoptimized plan.  ``node_perm``/``arc_perm``
+    map plan row -> original index and ``node_inv``/``arc_inv`` are the
+    inverses (original index -> plan row).
+    """
     graph.validate()
     arcs = graph.arcs
+    input_arcs = graph.input_arcs()
+    output_arcs = graph.output_arcs()
+    if optimize:
+        # arc permutation: environment buses first (inputs, then
+        # outputs), then internal arcs, then consts — role-contiguous
+        # so environment gathers walk compact index ranges
+        ordered: dict[str, None] = {}
+        for a in (*input_arcs, *output_arcs):
+            ordered.setdefault(a, None)
+        for a in arcs:
+            if a not in graph.consts:
+                ordered.setdefault(a, None)
+        for a in arcs:
+            ordered.setdefault(a, None)
+        old_pos = {a: i for i, a in enumerate(arcs)}
+        arcs = list(ordered)
+        arc_perm = np.asarray([old_pos[a] for a in arcs], np.int32)
+    else:
+        arc_perm = np.arange(len(arcs), dtype=np.int32)
+    arc_inv = np.empty_like(arc_perm)
+    arc_inv[arc_perm] = np.arange(len(arcs), dtype=np.int32)
     aidx = {a: i for i, a in enumerate(arcs)}
     A = len(arcs)
     FULL_PAD = A        # dummy slot, always full (pads missing inputs)
@@ -60,17 +94,37 @@ def _plan(graph: Graph):
         for k, a in enumerate(n.outputs):
             out_idx[i, k] = aidx[a]
 
+    if optimize:
+        node_perm = np.argsort(opcode, kind="stable").astype(np.int32)
+        opcode = opcode[node_perm]
+        in_idx = in_idx[node_perm]
+        out_idx = out_idx[node_perm]
+        class_slices = []
+        s = 0
+        while s < N:
+            e = s
+            while e < N and opcode[e] == opcode[s]:
+                e += 1
+            class_slices.append((int(opcode[s]), s, e))
+            s = e
+        class_slices = tuple(class_slices) or None
+    else:
+        node_perm = np.arange(N, dtype=np.int32)
+        class_slices = None
+    node_inv = np.empty_like(node_perm)
+    node_inv[node_perm] = np.arange(N, dtype=np.int32)
+
     const_mask = np.zeros((A + 2,), bool)
     for a in graph.consts:
         const_mask[aidx[a]] = True
 
-    input_arcs = graph.input_arcs()
-    output_arcs = graph.output_arcs()
     return dict(
         arcs=arcs, aidx=aidx, A=A, FULL_PAD=FULL_PAD, EMPTY_PAD=EMPTY_PAD,
         opcode=opcode, in_idx=in_idx, out_idx=out_idx,
         const_mask=const_mask, input_arcs=input_arcs,
-        output_arcs=output_arcs,
+        output_arcs=output_arcs, class_slices=class_slices,
+        node_perm=node_perm, node_inv=node_inv,
+        arc_perm=arc_perm, arc_inv=arc_inv,
     )
 
 
@@ -107,6 +161,58 @@ def _alu(op, a, b, dtype):
         Op.IFEQ: (a == b).astype(dtype), Op.IFDF: (a != b).astype(dtype),
     })
     return res
+
+
+def _alu_op(op, a, b, dtype):
+    """Single-opcode ALU result — the specialized fire body's per-bucket
+    kernel.  Formula-identical to the matching :func:`_alu` entry, but
+    only the requested opcode is traced, so the ``b == 0`` / shift-clamp
+    guards materialize solely for DIV/SHL/SHR buckets."""
+    is_int = jnp.issubdtype(dtype, jnp.integer)
+    if op in (Op.COPY, Op.BRANCH, Op.SINK):
+        return a
+    if op == Op.ADD:
+        return a + b
+    if op == Op.SUB:
+        return a - b
+    if op == Op.MUL:
+        return a * b
+    if op == Op.DIV:
+        if is_int:
+            return jnp.where(b == 0, 0, a // jnp.where(b == 0, 1, b))
+        return jnp.where(b == 0, 0.0, a / jnp.where(b == 0, 1.0, b))
+    if op == Op.AND:
+        return (a & b) if is_int else ((a != 0) & (b != 0)).astype(dtype)
+    if op == Op.OR:
+        return (a | b) if is_int else ((a != 0) | (b != 0)).astype(dtype)
+    if op == Op.XOR:
+        return (a ^ b) if is_int else ((a != 0) ^ (b != 0)).astype(dtype)
+    if op == Op.MAX:
+        return jnp.maximum(a, b)
+    if op == Op.MIN:
+        return jnp.minimum(a, b)
+    if op == Op.SHL:
+        return (a << jnp.clip(b, 0, 31)) if is_int else a * jnp.exp2(b)
+    if op == Op.SHR:
+        if is_int:
+            return a >> jnp.clip(b, 0, 31)
+        two_b = jnp.exp2(b)
+        return a / jnp.where(two_b == 0, 1, two_b)
+    if op == Op.NOT:
+        return (a == 0).astype(dtype)
+    if op == Op.IFGT:
+        return (a > b).astype(dtype)
+    if op == Op.IFGE:
+        return (a >= b).astype(dtype)
+    if op == Op.IFLT:
+        return (a < b).astype(dtype)
+    if op == Op.IFLE:
+        return (a <= b).astype(dtype)
+    if op == Op.IFEQ:
+        return (a == b).astype(dtype)
+    if op == Op.IFDF:
+        return (a != b).astype(dtype)
+    raise AssertionError(op)
 
 
 def _truthy(v):
@@ -252,7 +358,8 @@ class DataflowEngine:
 
     def __init__(self, graph: Graph, token_shape: tuple[int, ...] = (),
                  dtype=jnp.int32, max_cycles: int = 100_000,
-                 backend: str = "xla", block_cycles: int = 1):
+                 backend: str = "xla", block_cycles: int = 1,
+                 optimize: bool = False):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
         if block_cycles < 1:
@@ -263,7 +370,13 @@ class DataflowEngine:
         self.max_cycles = max_cycles
         self.backend = backend
         self.block_cycles = int(block_cycles)
-        self.p = _plan(graph)
+        # optimize=True builds the opcode-class-specialized plan
+        # (DESIGN.md §8): permuted node/arc tables + bucketed fire
+        # bodies.  Pure layout change — results stay bit-identical.
+        # (The reference backend is the oracle and always runs the
+        # graph as authored.)
+        self.optimize = bool(optimize)
+        self.p = _plan(graph, optimize=self.optimize)
         self._slot_steps: dict[int, object] = {}
         self._tables = None
         if backend == "pallas":
@@ -282,7 +395,8 @@ class DataflowEngine:
         the xla backend, eagerly for pallas)."""
         if self._tables is None:
             from repro.kernels.dataflow_fire import block_plan_arrays
-            self._tables = block_plan_arrays(self.graph)
+            self._tables = block_plan_arrays(self.graph,
+                                             optimize=self.optimize)
         return self._tables
 
     # -- public ---------------------------------------------------------
@@ -650,27 +764,11 @@ class DataflowEngine:
 
         EMPTY_PAD = p["EMPTY_PAD"]
         FULL_PAD = p["FULL_PAD"]
+        cs = p["class_slices"]
 
-        def cycle(s):
-            full, val = s["full"], s["val"]
-            # --- 1. strobe environment input buses -----------------------
-            if len(p["input_arcs"]):
-                can_feed = (~full[in_arc_idx]) & (s["ptr"] < feed_len)
-                nxt = jnp.take_along_axis(
-                    feed_vals, s["ptr"].reshape(-1, 1, *([1] * len(ts))),
-                    axis=1)[:, 0]
-                tgt = jnp.where(can_feed, in_arc_idx, EMPTY_PAD)
-                val = val.at[tgt].set(
-                    jnp.where(can_feed.reshape(-1, *([1] * len(ts))),
-                              nxt, val[tgt]))
-                full = full.at[tgt].set(can_feed | full[tgt])
-                ptr = s["ptr"] + can_feed
-                fed_any = jnp.any(can_feed)
-                full = full.at[EMPTY_PAD].set(False)
-            else:
-                ptr, fed_any = s["ptr"], jnp.bool_(False)
-
-            # --- 2. fire every ready node --------------------------------
+        def fire_rule_generic(full, val):
+            """Dense fire rule: every opcode's ALU result for every node,
+            selected by a ~20-way where-chain."""
             inf = full[in_idx]                       # [N,3]
             oute = ~full[out_idx]                    # [N,2]
             a = val[in_idx[:, 0]]
@@ -686,7 +784,8 @@ class DataflowEngine:
 
             dm_chosen_full = jnp.where(ctrl3, inf[:, 0], inf[:, 1])
             ready = all_in & all_out
-            ready = jnp.where(is_nd, (inf[:, 0] | inf[:, 1]) & all_out, ready)
+            ready = jnp.where(is_nd, (inf[:, 0] | inf[:, 1]) & all_out,
+                              ready)
             ready = jnp.where(is_dm, inf[:, 2] & dm_chosen_full & all_out,
                               ready)
             ready = jnp.where(
@@ -716,11 +815,103 @@ class DataflowEngine:
             consume = jnp.where(is_dm[:, None], ready[:, None] & dm_pick,
                                 consume)
 
-            # production mask [N,2] and produced values
+            # production mask [N,2]
             produce = ready[:, None] & jnp.ones((1, _MAX_OUT), bool)
             br_pick = jnp.stack([ctrl2, ~ctrl2], axis=1)
             produce = jnp.where(is_br[:, None], ready[:, None] & br_pick,
                                 produce)
+            return ready, z, consume, produce
+
+        _CTRL = (int(Op.NDMERGE), int(Op.DMERGE), int(Op.BRANCH))
+        has_ctrl = cs is not None and any(op in _CTRL for op, _, _ in cs)
+
+        def fire_rule_spec(full, val):
+            """Opcode-class-specialized fire rule (DESIGN.md §8): nodes
+            are bucketed by opcode in the plan, so a static Python loop
+            over only the classes present computes each bucket's exact
+            ALU result on its contiguous slice — no dense where-chain,
+            and the shift/div guards exist only if SHL/SHR/DIV do.
+            Control-free fabrics (every DAG bench) additionally keep
+            the uniform ready/consume/produce masks as single whole-
+            array ops: only the ALU result is bucketed."""
+            inf = full[in_idx]                       # [N,3]
+            oute = ~full[out_idx]                    # [N,2]
+            a = val[in_idx[:, 0]]
+            b = val[in_idx[:, 1]]
+            all_in = inf.all(axis=1)
+            all_out = oute.all(axis=1)
+            base = all_in & all_out
+            ones_i = jnp.ones((1, _MAX_IN), bool)
+            ones_o = jnp.ones((1, _MAX_OUT), bool)
+            if not has_ctrl:
+                z_p = [_alu_op(Op(op), a[lo:hi], b[lo:hi], dtype)
+                       for op, lo, hi in cs]
+                z = z_p[0] if len(z_p) == 1 else jnp.concatenate(z_p)
+                return (base, z, base[:, None] & ones_i,
+                        base[:, None] & ones_o)
+            r_p, z_p, c_p, p_p = [], [], [], []
+            for opi, lo, hi in cs:
+                op = Op(opi)
+                ak, bk = a[lo:hi], b[lo:hi]
+                infk, outek = inf[lo:hi], oute[lo:hi]
+                if op == Op.NDMERGE:
+                    rk = (infk[:, 0] | infk[:, 1]) & all_out[lo:hi]
+                    zk = jnp.where(_expand(infk[:, 0], ts), ak, bk)
+                    ck = rk[:, None] & jnp.stack(
+                        [infk[:, 0], ~infk[:, 0],
+                         jnp.zeros_like(infk[:, 0])], axis=1)
+                    pk = rk[:, None] & ones_o
+                elif op == Op.DMERGE:
+                    c3 = _truthy(val[in_idx[lo:hi, 2]])
+                    rk = (infk[:, 2]
+                          & jnp.where(c3, infk[:, 0], infk[:, 1])
+                          & all_out[lo:hi])
+                    zk = jnp.where(_expand(c3, ts), ak, bk)
+                    ck = rk[:, None] & jnp.stack(
+                        [c3, ~c3, jnp.ones_like(c3)], axis=1)
+                    pk = rk[:, None] & ones_o
+                elif op == Op.BRANCH:
+                    c2 = _truthy(bk)
+                    rk = (infk[:, 0] & infk[:, 1]
+                          & jnp.where(c2, outek[:, 0], outek[:, 1]))
+                    zk = ak
+                    ck = rk[:, None] & ones_i
+                    pk = rk[:, None] & jnp.stack([c2, ~c2], axis=1)
+                else:
+                    rk = base[lo:hi]
+                    zk = _alu_op(op, ak, bk, dtype)
+                    ck = rk[:, None] & ones_i
+                    pk = rk[:, None] & ones_o
+                r_p.append(rk)
+                z_p.append(zk)
+                c_p.append(ck)
+                p_p.append(pk)
+            return (jnp.concatenate(r_p), jnp.concatenate(z_p),
+                    jnp.concatenate(c_p), jnp.concatenate(p_p))
+
+        fire_rule = fire_rule_spec if cs else fire_rule_generic
+
+        def cycle(s):
+            full, val = s["full"], s["val"]
+            # --- 1. strobe environment input buses -----------------------
+            if len(p["input_arcs"]):
+                can_feed = (~full[in_arc_idx]) & (s["ptr"] < feed_len)
+                nxt = jnp.take_along_axis(
+                    feed_vals, s["ptr"].reshape(-1, 1, *([1] * len(ts))),
+                    axis=1)[:, 0]
+                tgt = jnp.where(can_feed, in_arc_idx, EMPTY_PAD)
+                val = val.at[tgt].set(
+                    jnp.where(can_feed.reshape(-1, *([1] * len(ts))),
+                              nxt, val[tgt]))
+                full = full.at[tgt].set(can_feed | full[tgt])
+                ptr = s["ptr"] + can_feed
+                fed_any = jnp.any(can_feed)
+                full = full.at[EMPTY_PAD].set(False)
+            else:
+                ptr, fed_any = s["ptr"], jnp.bool_(False)
+
+            # --- 2. fire every ready node --------------------------------
+            ready, z, consume, produce = fire_rule(full, val)
             pvals = jnp.stack([z, z], axis=1)        # [N,2,*ts]
 
             # scatter: consume, then produce (see module docstring)
@@ -789,6 +980,42 @@ def _expand(mask, ts):
 # ---------------------------------------------------------------------------
 # Pure-numpy reference engine (oracle for property tests + Pallas kernel ref)
 # ---------------------------------------------------------------------------
+def alu_numpy(op, a, b, dtype):
+    """Numpy mirror of the engine ALU — the reference engine's fire math
+    and the constant-folding pass's compile-time evaluator (sharing one
+    implementation keeps folded values bit-identical to fired ones)."""
+    is_int = np.issubdtype(dtype, np.integer)
+    if op in (Op.COPY, Op.BRANCH, Op.SINK):
+        return a
+    if op == Op.ADD: return a + b
+    if op == Op.SUB: return a - b
+    if op == Op.MUL: return a * b
+    if op == Op.DIV:
+        return np.where(b == 0, 0, a // np.where(b == 0, 1, b)) if is_int \
+            else np.where(b == 0, 0.0, a / np.where(b == 0, 1.0, b))
+    if op == Op.AND:
+        return (a & b) if is_int else ((a != 0) & (b != 0)).astype(dtype)
+    if op == Op.OR:
+        return (a | b) if is_int else ((a != 0) | (b != 0)).astype(dtype)
+    if op == Op.XOR:
+        return (a ^ b) if is_int else ((a != 0) ^ (b != 0)).astype(dtype)
+    if op == Op.MAX: return np.maximum(a, b)
+    if op == Op.MIN: return np.minimum(a, b)
+    if op == Op.SHL:
+        return (a << np.clip(b, 0, 31)) if is_int else a * np.exp2(b)
+    if op == Op.SHR:
+        return (a >> np.clip(b, 0, 31)) if is_int else a / np.exp2(b)
+    if op == Op.NOT: return (a == 0).astype(dtype)
+    if op == Op.IFGT: return (a > b).astype(dtype)
+    if op == Op.IFGE: return (a >= b).astype(dtype)
+    if op == Op.IFLT: return (a < b).astype(dtype)
+    if op == Op.IFLE: return (a <= b).astype(dtype)
+    if op == Op.IFEQ: return (a == b).astype(dtype)
+    if op == Op.IFDF: return (a != b).astype(dtype)
+    raise AssertionError(op)
+
+
+
 def run_reference(graph: Graph, feeds=None, token_shape=(), dtype=np.int32,
                   max_cycles: int = 100_000, trace=None) -> EngineResult:
     """Slow, obviously-correct mirror of :class:`DataflowEngine`.
@@ -814,37 +1041,9 @@ def run_reference(graph: Graph, feeds=None, token_shape=(), dtype=np.int32,
     ptr = {a: 0 for a in p["input_arcs"]}
     out_last = {a: np.zeros(token_shape, dtype) for a in p["output_arcs"]}
     out_count = {a: 0 for a in p["output_arcs"]}
-    is_int = np.issubdtype(dtype, np.integer)
 
     def compute(op, a, b):
-        if op in (Op.COPY, Op.BRANCH, Op.SINK):
-            return a
-        if op == Op.ADD: return a + b
-        if op == Op.SUB: return a - b
-        if op == Op.MUL: return a * b
-        if op == Op.DIV:
-            return np.where(b == 0, 0, a // np.where(b == 0, 1, b)) if is_int \
-                else np.where(b == 0, 0.0, a / np.where(b == 0, 1.0, b))
-        if op == Op.AND:
-            return (a & b) if is_int else ((a != 0) & (b != 0)).astype(dtype)
-        if op == Op.OR:
-            return (a | b) if is_int else ((a != 0) | (b != 0)).astype(dtype)
-        if op == Op.XOR:
-            return (a ^ b) if is_int else ((a != 0) ^ (b != 0)).astype(dtype)
-        if op == Op.MAX: return np.maximum(a, b)
-        if op == Op.MIN: return np.minimum(a, b)
-        if op == Op.SHL:
-            return (a << np.clip(b, 0, 31)) if is_int else a * np.exp2(b)
-        if op == Op.SHR:
-            return (a >> np.clip(b, 0, 31)) if is_int else a / np.exp2(b)
-        if op == Op.NOT: return (a == 0).astype(dtype)
-        if op == Op.IFGT: return (a > b).astype(dtype)
-        if op == Op.IFGE: return (a >= b).astype(dtype)
-        if op == Op.IFLT: return (a < b).astype(dtype)
-        if op == Op.IFLE: return (a <= b).astype(dtype)
-        if op == Op.IFEQ: return (a == b).astype(dtype)
-        if op == Op.IFDF: return (a != b).astype(dtype)
-        raise AssertionError(op)
+        return alu_numpy(op, a, b, dtype)
 
     def truthy(v):
         return np.asarray(v).ravel()[0] != 0

@@ -13,9 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Iterable, Mapping, Sequence
-
-import numpy as np
+from typing import Sequence
 
 
 class Op(enum.IntEnum):

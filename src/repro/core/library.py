@@ -243,6 +243,44 @@ def popcount_graph(bits: int = 16) -> Bench:
     return Bench(g, make_feeds, reference, "popc")
 
 
+def fir_filter_graph(taps: int = 8) -> Bench:
+    """Paper-style constant-coefficient FIR filter
+    ``y[t] = sum_k c_k * x[t-k]``: one MUL-by-const per tap feeding an
+    ADD reduce tree — the classic DSP pipeline a dataflow FPGA unrolls
+    spatially.  The host supplies the tapped delay line (``make_feeds``
+    windows the signal, one stream per tap), so the fabric is a pure
+    streaming DAG like the other vector benches.  ``c0`` is 1 on
+    purpose: its MUL is a no-op the identity-elimination pass
+    (core/passes.py) splices out."""
+    coeffs = [((3 * k) % 7) + 1 for k in range(taps)]   # 1..7, c0 == 1
+    g = Graph(name=f"fir_{taps}")
+    terms = []
+    for k in range(taps):
+        g.const(f"c{k}", coeffs[k])
+        g.add(Op.MUL, [f"x{k}", f"c{k}"], [f"t{k}"])
+        terms.append(f"t{k}")
+    _reduce_tree(g, terms, Op.ADD, "y", final="fir")
+    g.validate()
+
+    def make_feeds(x):
+        """x: raw signal of length T >= taps; emits T - taps + 1 output
+        tokens (tap k sees the signal delayed by k)."""
+        x = np.atleast_1d(np.asarray(x))
+        if x.shape[0] < taps:
+            raise ValueError(
+                f"fir_{taps} needs a signal of at least {taps} samples, "
+                f"got {x.shape[0]}")
+        T = x.shape[0] - taps + 1
+        return {f"x{k}": x[taps - 1 - k: taps - 1 - k + T]
+                for k in range(taps)}
+
+    def reference(x):
+        x = np.atleast_1d(np.asarray(x)).astype(np.int64)
+        return np.convolve(x, np.asarray(coeffs), "valid").astype(np.int64)
+
+    return Bench(g, make_feeds, reference, "fir")
+
+
 BENCHES: dict[str, Callable[[], Bench]] = {
     "fibonacci": fibonacci_graph,
     "vector_sum": vector_sum_graph,
@@ -250,6 +288,7 @@ BENCHES: dict[str, Callable[[], Bench]] = {
     "dot_prod": dot_product_graph,
     "bubble_sort": bubble_sort_graph,
     "pop_count": popcount_graph,
+    "fir": fir_filter_graph,
 }
 
 
@@ -267,6 +306,8 @@ def random_feeds(name: str, bench: Bench, k: int, rng=None) -> dict:
                                 rng.integers(0, 9, (k, n // 2)))
     if name == "pop_count":
         return bench.make_feeds(rng.integers(0, 2 ** 16, (k,)))
+    if name == "fir":
+        return bench.make_feeds(rng.integers(0, 99, (k + n - 1,)))
     return bench.make_feeds(rng.integers(0, 99, (k, n)))
 
 

@@ -43,8 +43,18 @@ from jax.experimental import pallas as pl
 from repro.core.graph import Op
 
 
-def _ready_and_z(opcode, in_idx, out_idx, full, val):
-    """Vectorized firing rule (shared by kernel and ref)."""
+def _ready_and_z(opcode, in_idx, out_idx, full, val, class_slices=None):
+    """Vectorized firing rule (shared by kernel and ref).
+
+    class_slices — static ``((opcode, start, stop), ...)`` from an
+    opcode-specialized plan (DESIGN.md §8).  When given, the node table
+    is permuted so equal opcodes are contiguous and the rule unrolls a
+    static loop over only the classes present: each bucket computes its
+    exact ALU result on its slice instead of the dense ~20-way
+    ``where``-chain, and the shift/div guards are only traced for
+    SHL/SHR/DIV buckets.  Bit-identical to the dense rule."""
+    if class_slices is not None:
+        return _ready_and_z_spec(class_slices, in_idx, out_idx, full, val)
     inf = full[in_idx] > 0                    # [N,3]
     oute = full[out_idx] == 0                 # [N,2]
     a = val[in_idx[:, 0]]
@@ -101,10 +111,69 @@ def _ready_and_z(opcode, in_idx, out_idx, full, val):
     return ready, z, consume, produce
 
 
+_CTRL_OPS = (int(Op.NDMERGE), int(Op.DMERGE), int(Op.BRANCH))
+
+
+def _ready_and_z_spec(class_slices, in_idx, out_idx, full, val):
+    """Opcode-class-specialized firing rule (scalar int32 fabric).
+    Control-free fabrics keep uniform ready/consume/produce masks as
+    whole-array ops; only the ALU result is bucketed."""
+    from repro.core.engine import _alu_op
+    inf = full[in_idx] > 0                    # [N,3]
+    oute = full[out_idx] == 0                 # [N,2]
+    a = val[in_idx[:, 0]]
+    b = val[in_idx[:, 1]]
+    all_in = inf.all(axis=1)
+    all_out = oute.all(axis=1)
+    base = all_in & all_out
+    if not any(op in _CTRL_OPS for op, _, _ in class_slices):
+        z_p = [_alu_op(Op(op), a[lo:hi], b[lo:hi], jnp.int32)
+               for op, lo, hi in class_slices]
+        z = z_p[0] if len(z_p) == 1 else jnp.concatenate(z_p)
+        return (base, z, base[:, None] & jnp.ones_like(inf),
+                base[:, None] & jnp.ones_like(oute))
+    r_p, z_p, c_p, p_p = [], [], [], []
+    for opi, lo, hi in class_slices:
+        op = Op(opi)
+        ak, bk = a[lo:hi], b[lo:hi]
+        infk, outek = inf[lo:hi], oute[lo:hi]
+        if op == Op.NDMERGE:
+            rk = (infk[:, 0] | infk[:, 1]) & all_out[lo:hi]
+            zk = jnp.where(infk[:, 0], ak, bk)
+            ck = rk[:, None] & jnp.stack(
+                [infk[:, 0], ~infk[:, 0], jnp.zeros_like(infk[:, 0])], 1)
+            pk = rk[:, None] & jnp.ones_like(outek)
+        elif op == Op.DMERGE:
+            c3 = val[in_idx[lo:hi, 2]] != 0
+            rk = (infk[:, 2] & jnp.where(c3, infk[:, 0], infk[:, 1])
+                  & all_out[lo:hi])
+            zk = jnp.where(c3, ak, bk)
+            ck = rk[:, None] & jnp.stack([c3, ~c3, jnp.ones_like(c3)], 1)
+            pk = rk[:, None] & jnp.ones_like(outek)
+        elif op == Op.BRANCH:
+            c2 = bk != 0
+            rk = (infk[:, 0] & infk[:, 1]
+                  & jnp.where(c2, outek[:, 0], outek[:, 1]))
+            zk = ak
+            ck = rk[:, None] & jnp.ones_like(infk)
+            pk = rk[:, None] & jnp.stack([c2, ~c2], 1)
+        else:
+            rk = base[lo:hi]
+            zk = _alu_op(op, ak, bk, jnp.int32)
+            ck = rk[:, None] & jnp.ones_like(infk)
+            pk = rk[:, None] & jnp.ones_like(outek)
+        r_p.append(rk)
+        z_p.append(zk)
+        c_p.append(ck)
+        p_p.append(pk)
+    return (jnp.concatenate(r_p), jnp.concatenate(z_p),
+            jnp.concatenate(c_p), jnp.concatenate(p_p))
+
+
 def _fire_body(opcode, in_idx, out_idx, prod_node, prod_slot, cons_node,
-               cons_slot, const_mask, full, val):
+               cons_slot, const_mask, full, val, class_slices=None):
     ready, z, consume, produce = _ready_and_z(opcode, in_idx, out_idx,
-                                              full, val)
+                                              full, val, class_slices)
     # arc-side gather (single producer / single consumer per channel)
     produced = produce[prod_node, prod_slot]
     consumed = consume[cons_node, cons_slot]
@@ -127,15 +196,17 @@ def _kernel(opcode_ref, in_idx_ref, out_idx_ref, prod_node_ref,
     fired_ref[0] = fired
 
 
-def plan_arrays(graph):
+def plan_arrays(graph, optimize: bool = False):
     """Static numpy tables incl. arc adjacency (dummy node N = never
-    ready; dummy slots pad)."""
+    ready; dummy slots pad).  With ``optimize=True`` the node table is
+    opcode-bucketed (see ``_plan``) and ``class_slices`` records the
+    static per-class ranges — the dummy node rides as a trailing
+    one-row SINK bucket so the specialized rule covers all N+1 rows."""
     import numpy as np
     from repro.core.engine import _plan
-    p = _plan(graph)
+    p = _plan(graph, optimize=optimize)
     A2 = p["A"] + 2
     N = len(graph.nodes)
-    N2 = N + 1                                  # dummy node
     opcode = np.concatenate([p["opcode"], [int(Op.SINK)]]).astype(np.int32)
     in_idx = np.concatenate(
         [p["in_idx"], [[p["EMPTY_PAD"]] * 3]]).astype(np.int32)
@@ -145,19 +216,23 @@ def plan_arrays(graph):
     prod_slot = np.zeros((A2,), np.int32)
     cons_node = np.full((A2,), N, np.int32)
     cons_slot = np.zeros((A2,), np.int32)
+    node_row = p["node_inv"]    # original node index -> plan row
     for i, n in enumerate(graph.nodes):
         for s, arc in enumerate(n.outputs):
-            prod_node[p["aidx"][arc]] = i
+            prod_node[p["aidx"][arc]] = node_row[i]
             prod_slot[p["aidx"][arc]] = s
         for s, arc in enumerate(n.inputs):
             if arc not in graph.consts:      # consts are never consumed
-                cons_node[p["aidx"][arc]] = i
+                cons_node[p["aidx"][arc]] = node_row[i]
                 cons_slot[p["aidx"][arc]] = s
     const_mask = p["const_mask"].astype(np.int32)
+    class_slices = None
+    if p["class_slices"] is not None:
+        class_slices = (*p["class_slices"], (int(Op.SINK), N, N + 1))
     return dict(opcode=opcode, in_idx=in_idx, out_idx=out_idx,
                 prod_node=prod_node, prod_slot=prod_slot,
                 cons_node=cons_node, cons_slot=cons_slot,
-                const_mask=const_mask, plan=p)
+                const_mask=const_mask, plan=p, class_slices=class_slices)
 
 
 def fire_step_pallas(tables, full, val, interpret=None):
@@ -196,7 +271,7 @@ _TABLE_KEYS = ("opcode", "in_idx", "out_idx", "prod_node", "prod_slot",
                "in_arc_idx", "out_arc_idx", "out_mask")
 
 
-def block_plan_arrays(graph):
+def block_plan_arrays(graph, optimize: bool = False):
     """plan_arrays + environment maps for in-kernel feed/drain.
 
     env_row[A2]     row into the feed table for input arcs, n_in (a pad
@@ -209,7 +284,7 @@ def block_plan_arrays(graph):
     zero-length axis.
     """
     import numpy as np
-    t = plan_arrays(graph)
+    t = plan_arrays(graph, optimize=optimize)
     p = t["plan"]
     A2 = p["A"] + 2
     n_in = max(len(p["input_arcs"]), 1)
@@ -229,13 +304,14 @@ def block_plan_arrays(graph):
     return t
 
 
-def _env_cycle(tab, feed_vals, feed_len, carry):
+def _env_cycle(tab, feed_vals, feed_len, carry, class_slices=None):
     """One full engine cycle (feed -> fire -> drain), gather-only.
 
     tab: dict of the _TABLE_KEYS arrays.  carry: (full, val, ptr,
     out_last, out_count, fired, last_prog, cyc).  Ordering matches
     `repro.core.engine.run_reference` exactly: inputs strobe first, the
     fire rule sees the post-feed registers, outputs drain post-fire.
+    class_slices selects the opcode-specialized fire rule.
     """
     full, val, ptr, out_last, out_count, fired, last_prog, cyc = carry
     L = feed_vals.shape[1]
@@ -253,7 +329,7 @@ def _env_cycle(tab, feed_vals, feed_len, carry):
     full, val, n_fired = _fire_body(
         tab["opcode"], tab["in_idx"], tab["out_idx"], tab["prod_node"],
         tab["prod_slot"], tab["cons_node"], tab["cons_slot"],
-        tab["const_mask"], full, val)
+        tab["const_mask"], full, val, class_slices)
     # 3. environment drains output buses
     got = full[tab["out_arc_idx"]] > 0
     out_last = jnp.where(got, val[tab["out_arc_idx"]], out_last)
@@ -265,7 +341,7 @@ def _env_cycle(tab, feed_vals, feed_len, carry):
 
 
 def _block_body(tab, feed_vals, feed_len, full, val, ptr, out_last,
-                out_count, n_cycles: int):
+                out_count, n_cycles: int, class_slices=None):
     """Run `n_cycles` engine cycles; pure jnp (shared by kernel + ref).
 
     Returns (full, val, ptr, out_last, out_count, fired, last_prog)
@@ -276,26 +352,28 @@ def _block_body(tab, feed_vals, feed_len, full, val, ptr, out_last,
     carry = (full, val, ptr, out_last, out_count,
              jnp.int32(0), jnp.int32(0), jnp.int32(0))
     carry = jax.lax.fori_loop(
-        0, n_cycles, lambda i, c: _env_cycle(tab, feed_vals, feed_len, c),
+        0, n_cycles,
+        lambda i, c: _env_cycle(tab, feed_vals, feed_len, c, class_slices),
         carry)
     return carry[:7]
 
 
-def _block_kernel(n_cycles, *refs):
+def _block_kernel(n_cycles, class_slices, *refs):
     """pallas kernel: 12 table refs, feed_vals, feed_len, 5 state refs in;
     5 state refs + fired + last_prog out."""
     ins, outs = refs[:19], refs[19:]
     tab = {k: r[...] for k, r in zip(_TABLE_KEYS, ins[:12])}
     feed_vals, feed_len = ins[12][...], ins[13][...]
     state = [r[...] for r in ins[14:19]]
-    res = _block_body(tab, feed_vals, feed_len, *state, n_cycles=n_cycles)
+    res = _block_body(tab, feed_vals, feed_len, *state, n_cycles=n_cycles,
+                      class_slices=class_slices)
     for r, v in zip(outs[:5], res[:5]):
         r[...] = v
     outs[5][0] = res[5]
     outs[6][0] = res[6]
 
 
-def _batched_block_kernel(n_cycles, *refs):
+def _batched_block_kernel(n_cycles, class_slices, *refs):
     """Same as _block_kernel but every non-table ref has a leading
     batch-block dim of 1 (grid over B selects the stream), plus a
     per-stream ``active`` flag: an inactive slot's block is skipped
@@ -310,7 +388,7 @@ def _batched_block_kernel(n_cycles, *refs):
     res = jax.lax.cond(
         active,
         lambda: _block_body(tab, feed_vals, feed_len, *state,
-                            n_cycles=n_cycles),
+                            n_cycles=n_cycles, class_slices=class_slices),
         lambda: (*state, jnp.int32(0), jnp.int32(0)))
     for r, v in zip(outs[:5], res[:5]):
         r[...] = v[None]
@@ -341,7 +419,8 @@ def fire_block_pallas(tables, feed_vals, feed_len, full, val, ptr,
     out_sd = ([jax.ShapeDtypeStruct(x.shape, jnp.int32) for x in state]
               + [jax.ShapeDtypeStruct((1,), jnp.int32)] * 2)
     return pl.pallas_call(
-        functools.partial(_block_kernel, n_cycles),
+        functools.partial(_block_kernel, n_cycles,
+                          tables.get("class_slices")),
         in_specs=[_whole(x) for x in (*tabs, feed_vals, feed_len, *state)],
         out_specs=[_whole(s) for s in out_sd],
         out_shape=out_sd,
@@ -376,7 +455,8 @@ def fire_block_batched_pallas(tables, feed_vals, feed_len, full, val, ptr,
     out_sd = ([jax.ShapeDtypeStruct(x.shape, jnp.int32) for x in state]
               + [jax.ShapeDtypeStruct((B, 1), jnp.int32)] * 2)
     return pl.pallas_call(
-        functools.partial(_batched_block_kernel, n_cycles),
+        functools.partial(_batched_block_kernel, n_cycles,
+                          tables.get("class_slices")),
         grid=(B,),
         in_specs=[_whole(x) for x in tabs]
         + [row(x) for x in (feed_vals, feed_len, *state)]

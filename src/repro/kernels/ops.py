@@ -28,13 +28,25 @@ def rmsnorm(x, w, eps=1e-5, rows_blk=256):
     return rmsnorm_pallas(x, w, eps=eps, rows_blk=rows_blk)
 
 
+_STATIC_TABLE_KEYS = ("plan", "class_slices")   # never device arrays
+
+
+def _device_tables(tables):
+    """jnp copies of the array tables; static entries pass through."""
+    import jax.numpy as jnp
+    jt = {k: jnp.asarray(v) for k, v in tables.items()
+          if k not in _STATIC_TABLE_KEYS}
+    for k in _STATIC_TABLE_KEYS:
+        if k in tables:
+            jt[k] = tables[k]
+    return jt
+
+
 def make_fire_step(graph):
     """Compile the dataflow fire-step kernel for a fabric; returns
     (tables, jitted fn(full, val) -> (full', val', fired))."""
-    import jax.numpy as jnp
     tables = plan_arrays(graph)
-    jt = {k: jnp.asarray(v) for k, v in tables.items() if k != "plan"}
-    jt["plan"] = tables["plan"]
+    jt = _device_tables(tables)
 
     @jax.jit
     def step(full, val):
@@ -44,7 +56,7 @@ def make_fire_step(graph):
 
 
 def make_block_step(graph, n_cycles: int, batched: bool = False,
-                    tables=None):
+                    tables=None, optimize: bool = False):
     """Compile the fused K-cycle fire-block kernel for a fabric.
 
     Returns (tables, jitted step).  Single-stream step signature:
@@ -57,11 +69,12 @@ def make_block_step(graph, n_cycles: int, batched: bool = False,
     active == 0 skip the block entirely (state frozen, fired/last_prog
     0) — pass ``jnp.ones((B,), jnp.int32)`` for the plain wave-batch
     semantics.  Pass a prior call's `tables` to reuse the plan instead
-    of rebuilding it."""
-    import jax.numpy as jnp
+    of rebuilding it; ``optimize=True`` builds opcode-class-specialized
+    tables (ignored when `tables` is given — the tables carry their own
+    ``class_slices``)."""
     if tables is None:
-        tables = block_plan_arrays(graph)
-    jt = {k: jnp.asarray(v) for k, v in tables.items() if k != "plan"}
+        tables = block_plan_arrays(graph, optimize=optimize)
+    jt = _device_tables(tables)
 
     if batched:
         @jax.jit

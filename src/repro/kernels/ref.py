@@ -36,7 +36,9 @@ def fire_block_ref(tables, feed_vals, feed_len, full, val, ptr, out_last,
     tab = {k: jnp.asarray(tables[k]) for k in _TABLE_KEYS}
     return _block_body(tab, jnp.asarray(feed_vals), jnp.asarray(feed_len),
                        full, val, ptr, out_last, out_count,
-                       n_cycles=n_cycles)
+                       n_cycles=n_cycles,
+                       class_slices=tables.get("class_slices")
+                       if hasattr(tables, "get") else None)
 
 
 def fire_block_masked_ref(tables, feed_vals, feed_len, full, val, ptr,

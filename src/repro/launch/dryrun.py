@@ -31,7 +31,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ARCHS, SHAPES, get_arch
 from repro.launch import hlo_analysis

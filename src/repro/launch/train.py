@@ -8,12 +8,11 @@ count; the checkpoint/restart path is identical in both modes.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 
 from repro.configs.base import ARCHS, get_arch
-from repro.data.pipeline import make_source, SyntheticLM
+from repro.data.pipeline import SyntheticLM
 from repro.optim import adamw
 from repro.train import loop as train_loop
 

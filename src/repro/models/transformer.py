@@ -24,7 +24,6 @@ seq-chunk by seq-chunk inside a scan so the [B,S,V] tensor is never live
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -35,7 +34,7 @@ from repro.configs.base import ArchConfig
 from repro.models import ssm
 from repro.models.layers import (KVCache, apply_norm, attn_block,
                                  flash_attention, init_attn, init_mlp,
-                                 init_norm, mlp_block, qkv_proj, rope)
+                                 init_norm, mlp_block)
 from repro.models.moe import init_moe, moe_block
 
 Params = Any

@@ -7,7 +7,6 @@ sharding (ZeRO-style when params are FSDP-sharded — see parallel/).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple
 
 import jax

@@ -17,7 +17,6 @@ Strategy (DESIGN.md §6):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import numpy as np

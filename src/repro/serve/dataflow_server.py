@@ -36,6 +36,8 @@ import collections
 import hashlib
 from typing import Iterable, Mapping
 
+import numpy as np
+
 from repro.core import asm
 from repro.core.engine import BACKENDS, DataflowEngine
 from repro.core.graph import Graph
@@ -61,21 +63,33 @@ def graph_signature(graph: Graph) -> str:
 
 def cached_engine(graph: Graph, *, backend: str = "xla",
                   block_cycles: int = 16,
-                  max_cycles: int = 100_000) -> DataflowEngine:
-    """Engine for (graph signature, backend, K) — compiled once, shared
-    by every server/request that presents the same fabric (the cache
-    key hashes the signature, not the graph object, so structurally
-    equal graphs share)."""
+                  max_cycles: int = 100_000,
+                  token_shape: tuple = (), dtype=np.int32,
+                  optimize: bool = False) -> DataflowEngine:
+    """Engine for (graph signature, backend, K, token_shape, dtype,
+    optimize) — compiled once, shared by every server/request that
+    presents the same fabric (the cache key hashes the signature, not
+    the graph object, so structurally equal graphs share).
+
+    token_shape/dtype/optimize are part of the key: two servers over
+    the same fabric signature with different token shapes or opt flags
+    compile to different plans and must not collide on one engine."""
     if backend not in BACKENDS:
         raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+    token_shape = tuple(int(d) for d in token_shape)
+    dtype = np.dtype(str(dtype)) if isinstance(dtype, str) \
+        else np.dtype(dtype)
     key = (hashlib.sha256(graph_signature(graph).encode()).hexdigest(),
-           backend, int(block_cycles), int(max_cycles))
+           backend, int(block_cycles), int(max_cycles),
+           token_shape, dtype.str, bool(optimize))
     eng = _ENGINE_CACHE.get(key)
     if eng is None:
         CACHE_STATS["misses"] += 1
-        eng = DataflowEngine(graph, backend=backend,
+        eng = DataflowEngine(graph, token_shape, dtype,
+                             backend=backend,
                              block_cycles=block_cycles,
-                             max_cycles=max_cycles)
+                             max_cycles=max_cycles,
+                             optimize=optimize)
         _ENGINE_CACHE[key] = eng
         while len(_ENGINE_CACHE) > _ENGINE_CACHE_MAX:
             _ENGINE_CACHE.popitem(last=False)
@@ -115,7 +129,8 @@ class DataflowServer:
     def __init__(self, graph: Graph, slots: int = 8,
                  block_cycles: int = 16, backend: str = "xla",
                  max_cycles: int = 100_000,
-                 engine: DataflowEngine | None = None):
+                 engine: DataflowEngine | None = None,
+                 optimize: bool = False):
         if slots < 1:
             raise ValueError("slots must be >= 1")
         if engine is not None:
@@ -129,9 +144,12 @@ class DataflowServer:
                     f"({engine.graph.name!r}, not {graph.name!r})")
             self.engine = engine
         else:
+            # optimize=True shares the opcode-class-specialized plan
+            # (DESIGN.md §8) across every slot; it joins the cache key
+            # because specialized and dense plans compile differently
             self.engine = cached_engine(
                 graph, backend=backend, block_cycles=block_cycles,
-                max_cycles=max_cycles)
+                max_cycles=max_cycles, optimize=optimize)
         self.state = self.engine.init_state(slots)
         self.slots = slots
         self.queue: collections.deque[Request] = collections.deque()

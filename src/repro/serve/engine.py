@@ -13,7 +13,7 @@ cache here remains future work.
 """
 from __future__ import annotations
 
-from typing import Callable, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

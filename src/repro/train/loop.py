@@ -19,10 +19,9 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from typing import Any, Callable
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.ckpt import checkpoint as ckpt
 from repro.data.pipeline import SyntheticLM

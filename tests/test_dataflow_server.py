@@ -205,6 +205,48 @@ def test_plan_cache_shares_engines_across_requests():
     assert CACHE_STATS["misses"] == 2
 
 
+def test_plan_cache_key_includes_shape_dtype_and_opt():
+    """Regression: the cache key once omitted token_shape and dtype, so
+    two servers over one fabric signature with different token shapes
+    collided on a single compiled engine.  token_shape, dtype and the
+    optimize flag all split the key now."""
+    clear_engine_cache()
+    g = library.vector_sum_graph(8).graph
+    base = cached_engine(g, backend="xla", block_cycles=4)
+    shaped = cached_engine(g, backend="xla", block_cycles=4,
+                           token_shape=(4,))
+    floated = cached_engine(g, backend="xla", block_cycles=4,
+                            dtype=np.float32)
+    opt = cached_engine(g, backend="xla", block_cycles=4, optimize=True)
+    assert len({id(base), id(shaped), id(floated), id(opt)}) == 4
+    assert CACHE_STATS["misses"] == 4 and CACHE_STATS["hits"] == 0
+    assert shaped.token_shape == (4,)
+    assert floated.dtype == np.float32
+    assert opt.optimize and opt.p["class_slices"] is not None
+    # and each variant is a hit the second time around
+    assert cached_engine(g, backend="xla", block_cycles=4,
+                         token_shape=(4,)) is shaped
+    assert cached_engine(g, backend="xla", block_cycles=4,
+                         optimize=True) is opt
+    assert CACHE_STATS["hits"] == 2
+
+
+def test_server_optimized_matches_solo_dense_runs():
+    """optimize=True on the server specializes the shared plan; every
+    request's result stays bit-identical to a dense solo run."""
+    bench = library.vector_sum_graph(8)
+    dense = DataflowEngine(bench.graph, backend="xla", block_cycles=4)
+    feeds = _mixed_feeds("vector_sum", bench, 5, base_seed=21)
+    solos = [dense.run(f) for f in feeds]
+    srv = DataflowServer(bench.graph, slots=2, block_cycles=4,
+                         backend="xla", optimize=True)
+    assert srv.engine.optimize
+    uids = [srv.submit(f) for f in feeds]
+    got = {r.uid: r for r in srv.drain()}
+    for uid, want in zip(uids, solos):
+        _check(got[uid].engine, want, ("opt-server", uid))
+
+
 def test_metrics_account_for_queueing_and_residency():
     bench = library.vector_sum_graph(8)
     eng = DataflowEngine(bench.graph, backend="xla", block_cycles=4)

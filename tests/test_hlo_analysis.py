@@ -1,7 +1,6 @@
 """Trip-count-aware HLO analyzer: validated against unrolled compiles."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_analysis import analyze
 
@@ -69,7 +68,6 @@ def test_dus_in_scan_is_aliased_not_restacked():
 
 
 def test_collectives_counted_with_trip_multiplier():
-    import os
     devs = jax.devices()
     if len(devs) < 2:
         # single-device session: collective path covered by dryrun sweep

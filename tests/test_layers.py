@@ -1,7 +1,5 @@
 """Layer numerics: flash attention vs naive oracle (hypothesis sweeps),
 chunked SSM vs per-token recurrence oracles."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

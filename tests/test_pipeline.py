@@ -8,9 +8,6 @@ import os
 import subprocess
 import sys
 
-import numpy as np
-import pytest
-
 from repro.core.pipeline import dataflow_schedule, dense_schedule
 
 

@@ -9,7 +9,7 @@ import pytest
 
 from repro.ckpt import checkpoint as ckpt
 from repro.configs.base import get_arch
-from repro.data.pipeline import SyntheticLM, make_source, prefetch
+from repro.data.pipeline import SyntheticLM, prefetch
 from repro.models import transformer as tfm
 from repro.optim import adamw
 from repro.serve.engine import Request, ServeEngine
