@@ -258,6 +258,9 @@ def compile_graph(graph: Graph, token_shape=(), dtype=jnp.int32,
         specialized plan.  Rewrites shrink the fabric, so for fabrics
         that quiesce the surviving output arcs drain bit-identical
         values and token counts while ``cycles``/``fired`` may shrink.
+        With ``backend="auto"`` only the rewrite half applies — the
+        auto executors are trace-time unrolled SSA with no plan to
+        specialize; pick an engine backend to get both halves.
     The returned callable exposes the rewritten graph as ``.graph``
     and the rewrite report as ``.report`` (None when no rewrites ran).
     """

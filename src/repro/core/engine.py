@@ -999,12 +999,24 @@ def alu_numpy(op, a, b, dtype):
         return (a | b) if is_int else ((a != 0) | (b != 0)).astype(dtype)
     if op == Op.XOR:
         return (a ^ b) if is_int else ((a != 0) ^ (b != 0)).astype(dtype)
-    if op == Op.MAX: return np.maximum(a, b)
-    if op == Op.MIN: return np.minimum(a, b)
+    if op == Op.MAX:
+        if is_int:
+            return np.maximum(a, b)
+        # match the jax ALUs' signed-zero tie: max(+0., -0.) is +0. in
+        # either order, where np.maximum keeps b's zero
+        return np.where((a == 0) & (b == 0), a + b, np.maximum(a, b))
+    if op == Op.MIN:
+        if is_int:
+            return np.minimum(a, b)
+        # dually min(+0., -0.) is -0. in either order
+        return np.where((a == 0) & (b == 0), -(-a + -b), np.minimum(a, b))
     if op == Op.SHL:
         return (a << np.clip(b, 0, 31)) if is_int else a * np.exp2(b)
     if op == Op.SHR:
-        return (a >> np.clip(b, 0, 31)) if is_int else a / np.exp2(b)
+        if is_int:
+            return a >> np.clip(b, 0, 31)
+        two_b = np.exp2(b)
+        return a / np.where(two_b == 0, 1, two_b)
     if op == Op.NOT: return (a == 0).astype(dtype)
     if op == Op.IFGT: return (a > b).astype(dtype)
     if op == Op.IFGE: return (a >= b).astype(dtype)

@@ -13,8 +13,9 @@ static structure out of the runtime schedule:
   :func:`repro.core.engine.alu_numpy`, so folded values are bit-identical
   to fired ones at the target dtype);
 * **identity elimination** — ``x op c`` where the const ``c`` makes the
-  op a no-op at the target dtype (``+0 -0 |0 ^0 <<0 >>0 *1 /1``; the
-  bitwise forms only for integer dtypes) is spliced out of the wire;
+  op a no-op at the target dtype (``+0 -0 |0 ^0 <<0 >>0 *1 /1`` for
+  integer dtypes; only ``*1 /1`` for floats, where ``+0.0``/``-0.0``
+  forms are not bit-exact on signed zeros) is spliced out of the wire;
 * **dead-node/dead-arc elimination** — a *closed* region of nodes that
   cannot reach any output arc, and whose inputs come only from const
   buses or other dead nodes, is deleted along with its now-unreferenced
@@ -31,6 +32,25 @@ less work.  For full-field bit-identity (cycles/fired included) use the
 *plan-level* opcode-class specialization alone
 (``DataflowEngine(optimize=True)`` / ``compile_graph(optimize="spec")``),
 which is a pure layout permutation.
+
+**NDMERGE makes rewrites timing-sensitive.**  NDMERGE arbitration picks
+whichever input token *arrives first* (tie: a), so the winner depends on
+arc refill cadence, not just on values.  Folding replaces a
+periodically-refilled arc with an always-full const bus, and an
+identity splice removes a one-token pipeline register (tokens arrive a
+cycle earlier and the wire's capacity drops from two tokens to one) —
+either can flip which input wins a race.  Backpressure couples timing
+globally (a COPY whose outputs straddle two cones propagates a stall
+from one into the other), so no cone-local guard is sound: the fold and
+identity passes simply *bail out* of any graph that contains an
+NDMERGE, leaving it untouched.  DCE still runs — a removable region is
+disconnected from the live fabric by construction, so deleting it
+cannot perturb a live merge (and once a dead NDMERGE is deleted, later
+fixpoint rounds fold/splice the now merge-free remainder).
+
+The identity splice is additionally restricted to acyclic graphs: on a
+cyclic path the removed register shrinks the loop's token capacity,
+which can change blocking/deadlock behavior even without an NDMERGE.
 
 The passes run to a joint fixpoint: folding a node can turn its
 consumer into an identity, and splicing an identity can strand a dead
@@ -98,10 +118,21 @@ def _const_value(consts, arc, dtype):
     return np.asarray(consts[arc], dtype).reshape(())
 
 
+def _has_ndmerge(graph: Graph) -> bool:
+    return any(n.op == Op.NDMERGE for n in graph.nodes)
+
+
 def constant_fold(graph: Graph, dtype=np.int32) -> tuple[Graph, int]:
     """Fold every pure value node whose inputs are all const arcs; its
     output arcs become const buses carrying the compile-time result.
-    Iterates so chains of constants collapse completely."""
+    Iterates so chains of constants collapse completely.
+
+    Bails out (returns the graph unchanged) when the graph contains an
+    NDMERGE: a const bus is always full while the folded node refilled
+    its arc periodically, and that cadence change can flip which input
+    wins a downstream arbitration race (see module docstring)."""
+    if _has_ndmerge(graph):
+        return graph, 0
     dtype = np.dtype(dtype)
     nodes = list(graph.nodes)
     consts = dict(graph.consts)
@@ -128,13 +159,17 @@ def constant_fold(graph: Graph, dtype=np.int32) -> tuple[Graph, int]:
 
 
 # op -> const operand value that makes `a op const` the identity on a.
-# The bitwise/shift forms only hold for integer dtypes (float AND/OR/XOR
-# are booleanizing and never identities).
+# Only MUL/DIV hold for float dtypes: OR/XOR booleanize, SHL/SHR rescale
+# through exp2's rounding, and ADD/SUB are not BIT-exact identities for
+# signed zeros (-0.0 + 0.0 is +0.0, and the `== 0` match also accepts a
+# -0.0 const, for which x - (-0.0) flips -0.0 to +0.0) — splicing them
+# would break the bit-identical-last-values contract.
 _IDENTITY_B = {
     Op.ADD: 0, Op.SUB: 0, Op.MUL: 1, Op.DIV: 1,
     Op.OR: 0, Op.XOR: 0, Op.SHL: 0, Op.SHR: 0,
 }
-_INT_ONLY_IDENTITIES = frozenset((Op.OR, Op.XOR, Op.SHL, Op.SHR))
+_INT_ONLY_IDENTITIES = frozenset(
+    (Op.ADD, Op.SUB, Op.OR, Op.XOR, Op.SHL, Op.SHR))
 
 
 def eliminate_identities(graph: Graph, dtype=np.int32
@@ -143,7 +178,15 @@ def eliminate_identities(graph: Graph, dtype=np.int32
     op a no-op, rewiring ``a``'s producer straight onto ``z`` (or ``z``'s
     consumer straight onto ``a`` when ``a`` is an environment input).
     Skips the splice when it would fuse an environment input directly to
-    an environment output (both interface arcs must keep existing)."""
+    an environment output (both interface arcs must keep existing).
+
+    Bails out (returns the graph unchanged) when the graph contains an
+    NDMERGE or is cyclic: a spliced node was a one-token pipeline
+    register, and removing it shifts arrival timing by a cycle and
+    shrinks the wire's capacity — which can flip a merge race, and on a
+    cyclic path can change blocking behavior (module docstring)."""
+    if _has_ndmerge(graph) or graph.is_cyclic():
+        return graph, 0
     dtype = np.dtype(dtype)
     is_int = np.issubdtype(dtype, np.integer)
     producers = graph.producers()

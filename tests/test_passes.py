@@ -273,6 +273,54 @@ def test_identity_elimination_is_dtype_aware():
                        run_reference(g2, feeds), "identity-splice")
 
 
+def test_const_fed_ndmerge_race_is_not_folded():
+    """NDMERGE arbitration depends on token *arrival timing*, so folding
+    must bail on merge-bearing graphs.  Regression for the review case:
+    with feeds w=[7], s=[100] the authored fabric drains 107 (the merge
+    takes ``w`` during ``m``'s one-cycle refill gap) but a folded fabric
+    would drain 110 (``m`` always full as a const bus; tie picks a, so
+    ``w`` is never consumed) — bit-identity would be violated."""
+    g = Graph(name="merge_race")
+    g.const("c", 5)
+    g.add(Op.ADD, ["c", "c"], ["m"])         # all-const, but feeds a race
+    g.add(Op.NDMERGE, ["m", "w"], ["y"])
+    g.add(Op.ADD, ["y", "s"], ["out"])
+    opt, report = passes.optimize_graph(g)
+    assert not report.changed and len(opt.nodes) == 3
+    feeds = {"w": [7], "s": [100]}
+    want = run_reference(g, feeds, max_cycles=500)
+    got = run_reference(opt, feeds, max_cycles=500)
+    assert want.cycles < 500                 # both fabrics quiesce
+    _check_observables(got, want, "merge-race")
+    # the stream token must have won its race in both fabrics
+    assert int(np.asarray(want.outputs["out"])) == 107
+
+
+def test_identity_feeding_ndmerge_cone_is_kept():
+    """An identity node is a one-token pipeline register; splicing it
+    out shifts downstream arrivals a cycle earlier, which can flip an
+    NDMERGE race — the pass bails on merge-bearing graphs."""
+    g = Graph(name="merge_ident")
+    g.const("z0", 0)
+    g.add(Op.ADD, ["x", "z0"], ["m"])        # no-op, but a register
+    g.add(Op.NDMERGE, ["m", "w"], ["out"])
+    opt, report = passes.optimize_graph(g)
+    assert report.identities == 0 and len(opt.nodes) == 2
+
+
+def test_identity_on_cyclic_fabric_is_kept():
+    """On a cyclic path the spliced register's lost capacity can change
+    blocking behavior, so the identity pass is restricted to DAGs."""
+    g = Graph(name="cyc_ident")
+    g.const("z0", 0)
+    g.add(Op.ADD, ["x", "fb"], ["m"])
+    g.add(Op.COPY, ["m"], ["t", "out"])
+    g.add(Op.ADD, ["t", "z0"], ["fb"])       # identity on the loop
+    assert g.is_cyclic()
+    opt, report = passes.optimize_graph(g)
+    assert report.identities == 0 and len(opt.nodes) == 3
+
+
 def test_dce_removes_closed_dead_region_only():
     g = Graph(name="dce")
     g.const("c1", 3)
@@ -338,6 +386,96 @@ def test_float_constant_folding_is_exact():
     g2.add(Op.MUL, ["m", "k"], ["out"])
     _, rep2 = passes.optimize_graph(g2, dtype=np.float32)
     assert rep2.identities == 0
+
+
+def test_float_add_zero_is_not_spliced_signed_zero():
+    """x + 0.0 is not a BIT-exact identity: -0.0 + 0.0 == +0.0 per IEEE
+    754, so splicing the ADD would propagate -0.0 where the authored
+    fabric drains +0.0.  Float identities are restricted to *1 /1."""
+    g = Graph(name="szero")
+    g.const("z0", 0.0)
+    g.const("k", 2.0)
+    g.add(Op.ADD, ["x", "z0"], ["t"])
+    g.add(Op.MUL, ["t", "k"], ["out"])
+    opt, report = passes.optimize_graph(g, dtype=np.float32)
+    assert report.identities == 0 and len(opt.nodes) == 2
+    feeds = {"x": np.asarray([-0.0], np.float32)}
+    want = run_reference(g, feeds, dtype=np.float32)
+    got = run_reference(opt, feeds, dtype=np.float32)
+    assert (np.signbit(np.asarray(got.outputs["out"]))
+            == np.signbit(np.asarray(want.outputs["out"])))
+    # MUL/DIV by one stay bit-exact spliceable for floats
+    g2 = Graph(name="fmul1")
+    g2.const("one", 1.0)
+    g2.const("k", 2.0)
+    g2.add(Op.MUL, ["x", "one"], ["t"])
+    g2.add(Op.ADD, ["t", "k"], ["out"])
+    opt2, rep2 = passes.optimize_graph(g2, dtype=np.float32)
+    assert rep2.identities == 1 and len(opt2.nodes) == 1
+    got2 = run_reference(opt2, feeds, dtype=np.float32)
+    want2 = run_reference(g2, feeds, dtype=np.float32)
+    np.testing.assert_array_equal(np.asarray(got2.outputs["out"]),
+                                  np.asarray(want2.outputs["out"]))
+    assert (np.signbit(np.asarray(got2.outputs["out"]))
+            == np.signbit(np.asarray(want2.outputs["out"])))
+
+
+def test_float_shr_underflow_guard_matches_jax_alus():
+    """alu_numpy (the reference engine's fire math AND the folder's
+    compile-time evaluator) guards float SHR's exp2 underflow exactly
+    like the jax `_alu`/`_alu_op` paths: exp2(-200) underflows float32
+    to 0, and a/0 would fold to inf where the live engines produce a."""
+    from repro.core.engine import alu_numpy
+    a = np.float32(3.0)
+    assert alu_numpy(Op.SHR, a, np.float32(-200.0), np.float32) == a
+    g = Graph(name="shr_fold")
+    g.const("a", 3.0)
+    g.const("b", -200.0)
+    g.add(Op.SHR, ["a", "b"], ["s"])
+    g.add(Op.ADD, ["s", "x"], ["out"])
+    opt, report = passes.optimize_graph(g, dtype=np.float32)
+    assert report.folded == 1 and opt.consts["s"] == 3.0
+    feeds = {"x": np.asarray([1.0, 2.0], np.float32)}
+    want = DataflowEngine(g, dtype=np.float32, backend="xla",
+                          block_cycles=4).run(feeds)
+    for run in (run_reference(opt, feeds, dtype=np.float32),
+                DataflowEngine(opt, dtype=np.float32, backend="xla",
+                               block_cycles=4, optimize=True).run(feeds)):
+        for arc, c in want.counts.items():
+            assert run.counts[arc] == c
+            np.testing.assert_array_equal(np.asarray(run.outputs[arc]),
+                                          np.asarray(want.outputs[arc]))
+
+
+def test_alu_numpy_matches_jax_alu_on_edge_operands():
+    """alu_numpy (fold / reference fire math) and the jax `_alu_op`
+    (specialized fire) are hand-synced copies of one formula table, and
+    the float-SHR underflow drift shipped because no test compared them
+    on edge operands.  Pin bit-for-bit parity across every value op x
+    dtype on the historical drift points: zero divisors, signed zeros,
+    shift over/underflow, extreme magnitudes."""
+    import jax.numpy as jnp
+    from repro.core.engine import _alu_op, alu_numpy
+    cases = {
+        np.int32: [-(2 ** 31), -40, -1, 0, 1, 5, 31, 40, 2 ** 31 - 1],
+        np.float32: [-np.inf, -200.0, -1.5, -0.0, 0.0, 0.5, 1.0,
+                     200.0, np.inf],
+    }
+    ops = [op for op in Op if op not in (Op.DMERGE, Op.NDMERGE)]
+    for dt, vals in cases.items():
+        A, B = np.meshgrid(np.asarray(vals, dt), np.asarray(vals, dt))
+        a, b = A.ravel(), B.ravel()
+        is_f = np.issubdtype(dt, np.floating)
+        for op in ops:
+            with np.errstate(all="ignore"):
+                want = np.asarray(alu_numpy(op, a, b, dt), dt)
+            got = np.asarray(
+                _alu_op(op, jnp.asarray(a), jnp.asarray(b), dt)
+            ).astype(dt, copy=False)
+            nan = np.isnan(want) if is_f else np.zeros(want.shape, bool)
+            assert (got.view(np.uint32)[~nan]
+                    == want.view(np.uint32)[~nan]).all(), (op, dt)
+            assert np.isnan(got[nan]).all(), (op, dt)
 
 
 def test_optimize_graph_rejects_unknown_pass():
