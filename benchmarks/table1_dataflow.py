@@ -26,6 +26,7 @@ import numpy as np
 from repro.core import library
 from repro.core.compile import compile_dag_stream, compile_cyclic
 from repro.core.engine import DataflowEngine
+from repro.core.graph import Op
 
 
 def _time(fn, *args, reps=5):
@@ -51,25 +52,33 @@ def rows(benches=None):
         eng = DataflowEngine(g)
         if name == "fibonacci":
             feeds1 = feeds_k = library.random_feeds(name, bench, 20, rng)
-            run = compile_cyclic(g)
-            compiled_call = lambda: run(feeds1)
             n_stream = 1
         else:
             feeds_k = library.random_feeds(name, bench, stream_k, rng)
             feeds1 = {a: np.asarray(v)[:1] for a, v in feeds_k.items()}
+            n_stream = stream_k
+        # control ops need token-presence semantics (e.g. the traced
+        # relu_chain's select lowering; DMERGE consumes only its chosen
+        # input, so streams advance unevenly), so those DAGs stream
+        # through the trace-time-unrolled cyclic backend like fibonacci
+        if g.is_cyclic() or any(n.op in (Op.BRANCH, Op.NDMERGE,
+                                         Op.DMERGE) for n in g.nodes):
+            run = compile_cyclic(g)
+            fk = feeds_k
+            compiled_call = lambda: run(fk)
+            get_vals = lambda res: list(res.outputs.values())
+        else:
             fn = compile_dag_stream(g)
             feeds_np = {k: np.asarray(v, np.int32)
                         for k, v in feeds_k.items()}
             compiled_call = lambda: fn(feeds_np)
-            n_stream = stream_k
+            get_vals = lambda res: list(res.values())
 
         lat = eng.run(feeds1).cycles
         thr = eng.run(feeds_k).cycles if n_stream > 1 else lat
         cyc_per_tok = (thr - lat) / max(n_stream - 1, 1) if n_stream > 1 \
             else lat
-        us = _time(lambda: np.asarray(
-            list(compiled_call().outputs.values() if name == "fibonacci"
-                 else compiled_call().values())[0]))
+        us = _time(lambda: np.asarray(get_vals(compiled_call())[0]))
         out.append({
             "name": name, "nodes": r["nodes"], "arcs": r["arcs"],
             "ff_bits": r["ff_bits"], "lut_weight": r["lut_weight"],

@@ -10,13 +10,24 @@ arity (e.g. ``add s10, dadoe, s11`` reads s10 and dadoe, writes s11;
 s10 and f-output pf; ``dmerge s2, dadoc, s1, s3`` reads a=s2, b=dadoc,
 ctrl=s1, writes s3).
 
-``const <arc> = <int>;`` declares a sticky environment bus (the FPGA input
-bus that always presents its value, e.g. the `dadoe` increment in the
-paper's Fibonacci graph).
+``const <arc> = <number>;`` declares a sticky environment bus (the FPGA
+input bus that always presents its value, e.g. the `dadoe` increment in
+the paper's Fibonacci graph).  Values may be integers (any Python int
+literal base) or floats — float fabrics from the tracing frontend
+(:mod:`repro.front`) carry non-integral coefficients, and ``emit`` must
+round-trip them exactly for the serving layer's signature cache.
+
+Errors: malformed statements, unknown opcodes, wrong argument counts,
+bad/duplicate const declarations raise :class:`SyntaxError` naming the
+offending statement; structural violations (an arc with two producers
+or two receivers, a const arc that is also produced) surface as the
+:class:`ValueError` of :meth:`repro.core.graph.Graph.validate`.
 """
 from __future__ import annotations
 
 import re
+
+import numpy as np
 
 from repro.core.graph import ARITY, Graph, Op
 
@@ -30,6 +41,31 @@ _ALIASES = {
 }
 
 _STMT = re.compile(r"^(?:\d+\s*\.)?\s*(\w+)\s+(.*)$")
+
+
+def _parse_const(raw: str, stmt: str):
+    """int (any base) or float const value; SyntaxError otherwise."""
+    try:
+        return int(raw, 0)
+    except ValueError:
+        try:
+            return float(raw)
+        except ValueError:
+            raise SyntaxError(
+                f"bad const value {raw!r} in {stmt!r}") from None
+
+
+def _emit_const(val) -> str:
+    """Round-trippable text for a const value: ints (and integral
+    floats, which cast identically at any execution dtype) as ints,
+    everything else through repr — float32-exact, and -0.0 / inf / nan
+    keep their bit patterns."""
+    if isinstance(val, (int, np.integer)):
+        return str(int(val))
+    f = float(val)
+    if f.is_integer() and not (f == 0.0 and np.signbit(f)):
+        return str(int(f))
+    return repr(f)
 
 
 def parse(text: str, name: str = "asm") -> Graph:
@@ -48,8 +84,16 @@ def parse(text: str, name: str = "asm") -> Graph:
             raise SyntaxError(f"bad statement: {stmt!r}")
         opname, rest = m.group(1).lower(), m.group(2)
         if opname == "const":
-            arc, _, val = rest.partition("=")
-            g.const(arc.strip(), int(val.strip(), 0))
+            arc, eq, val = rest.partition("=")
+            arc, val = arc.strip(), val.strip()
+            if not eq or not arc or not val:
+                raise SyntaxError(
+                    f"bad const declaration {stmt!r} "
+                    "(want 'const <arc> = <number>;')")
+            if arc in g.consts:
+                raise SyntaxError(f"const arc {arc!r} redeclared "
+                                  f"in {stmt!r}")
+            g.const(arc, _parse_const(val, stmt))
             continue
         if opname in _ALIASES:
             op = _ALIASES[opname]
@@ -72,7 +116,7 @@ def emit(g: Graph) -> str:
     """Graph -> assembler text (round-trips through :func:`parse`)."""
     out = []
     for arc, val in g.consts.items():
-        out.append(f"const {arc} = {int(val)};")
+        out.append(f"const {arc} = {_emit_const(val)};")
     for i, n in enumerate(g.nodes, start=1):
         args = ", ".join((*n.inputs, *n.outputs))
         out.append(f"{i}. {n.op.name.lower()} {args};")

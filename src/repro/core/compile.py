@@ -18,7 +18,11 @@ Two backends, selected by graph shape:
   bit-identical to :class:`repro.core.engine.DataflowEngine` (property-
   tested), but XLA sees straight-line scalar code per cycle and fuses it.
 
-``compile_graph`` dispatches on cyclicity.
+``compile_graph`` dispatches on cyclicity.  ``compile_fn`` goes one
+step earlier: it traces an ordinary scalar jax program through the
+:mod:`repro.front` frontend and compiles the synthesized fabric, so
+arbitrary expressions — not just the hand-assembled library benches —
+reach every executor through one entry point.
 """
 from __future__ import annotations
 
@@ -49,6 +53,10 @@ def compile_dag(graph: Graph, dtype=jnp.int32):
 
     Supports primitive/decider/copy/dmerge/sink nodes.  ``branch`` and
     ``ndmerge`` need token-presence semantics — use the cyclic backend.
+    Note ``dmerge`` here is a pure per-element select (both inputs
+    advance together); that matches the engine only when every stream
+    element fires every node once, which is why ``compile_graph``'s
+    auto dispatch sends DMERGE-bearing graphs to the cyclic backend.
     """
     order = graph.try_topo_order()
     if order is None:
@@ -292,12 +300,49 @@ def compile_graph(graph: Graph, token_shape=(), dtype=jnp.int32,
         run.graph = graph
         run.report = report
         return run
+    # DMERGE joins BRANCH/NDMERGE here: compile_dag's DMERGE is a pure
+    # per-element select (both input streams advance in lockstep), but
+    # the engine's DMERGE consumes only the CHOSEN input token, so the
+    # streams advance unevenly under data-dependent control — only the
+    # token-presence (cyclic) backend reproduces that
     if graph.is_cyclic() or any(
-            n.op in (Op.BRANCH, Op.NDMERGE) for n in graph.nodes):
+            n.op in (Op.BRANCH, Op.NDMERGE, Op.DMERGE)
+            for n in graph.nodes):
         run = compile_cyclic(graph, token_shape, dtype, max_cycles)
     else:
         fn = compile_dag_stream(graph, dtype)
         run = lambda feeds: fn(feeds)   # jit fns reject new attributes
     run.graph = graph
     run.report = report
+    return run
+
+
+def compile_fn(fn, *avals, backend: str = "xla", block_cycles: int = 16,
+               optimize=False, max_cycles: int = 100_000,
+               name: str | None = None, const_args: dict | None = None):
+    """Trace a scalar jax program (:func:`repro.front.trace`) and hand
+    the synthesized fabric to :func:`compile_graph` in one step.
+
+    Returns the executor callable with the frontend bookkeeping
+    attached: ``run.make_feeds(*streams)`` is the positional feed
+    adapter, ``run.out_arcs`` the result arcs in return order,
+    ``run.traced`` the :class:`~repro.front.TracedProgram` as authored
+    (``run.graph`` is the post-rewrite fabric when ``optimize`` folds
+    it).  The execution dtype is the avals' common dtype::
+
+        run = compile_fn(lambda x, y: jnp.where(x > y, x - y, y - x),
+                         np.int32, np.int32,
+                         backend="pallas", optimize="full")
+        res = run(run.make_feeds([5, 1], [2, 9]))
+        res.outputs[run.out_arcs[0]]        # -> 8 (last token)
+    """
+    from repro.front import trace
+    prog = trace(fn, *avals, name=name, const_args=const_args)
+    run = compile_graph(prog, token_shape=(),
+                        dtype=jnp.dtype(str(prog.dtype)),
+                        max_cycles=max_cycles, backend=backend,
+                        block_cycles=block_cycles, optimize=optimize)
+    run.traced = prog
+    run.make_feeds = prog.make_feeds
+    run.out_arcs = list(prog.out_arcs)
     return run

@@ -983,7 +983,20 @@ def _expand(mask, ts):
 def alu_numpy(op, a, b, dtype):
     """Numpy mirror of the engine ALU — the reference engine's fire math
     and the constant-folding pass's compile-time evaluator (sharing one
-    implementation keeps folded values bit-identical to fired ones)."""
+    implementation keeps folded values bit-identical to fired ones).
+
+    Integer overflow wraps two's-complement and float specials follow
+    IEEE, exactly like the jax ALUs — numpy's over/invalid warnings are
+    suppressed because that wrapping IS the contract (the fuzz harness
+    feeds INT_MIN/INT_MAX operands on purpose).  Hot loops
+    (:func:`run_reference`'s fire step) enter one errstate around the
+    whole run and call :func:`_alu_numpy` directly instead of paying
+    the context-manager round-trip per firing."""
+    with np.errstate(all="ignore"):
+        return _alu_numpy(op, a, b, dtype)
+
+
+def _alu_numpy(op, a, b, dtype):
     is_int = np.issubdtype(dtype, np.integer)
     if op in (Op.COPY, Op.BRANCH, Op.SINK):
         return a
@@ -1034,7 +1047,17 @@ def run_reference(graph: Graph, feeds=None, token_shape=(), dtype=np.int32,
 
     trace: optional callback receiving (cycle, node_index, value) for
     every firing — used e.g. to extract pipeline schedules
-    (core/pipeline.py)."""
+    (core/pipeline.py).  One errstate for the whole run: integer
+    wraparound / float specials are the ALU contract (see
+    :func:`alu_numpy`), and entering a context manager per firing
+    would tax the per-node python loop."""
+    with np.errstate(all="ignore"):
+        return _run_reference(graph, feeds, token_shape, dtype,
+                              max_cycles, trace)
+
+
+def _run_reference(graph, feeds, token_shape, dtype, max_cycles,
+                   trace) -> EngineResult:
     p = _plan(graph)
     feeds = {a: np.asarray(v, dtype).reshape(-1, *token_shape)
              if np.asarray(v).ndim == 1 and token_shape == ()
@@ -1055,7 +1078,7 @@ def run_reference(graph: Graph, feeds=None, token_shape=(), dtype=np.int32,
     out_count = {a: 0 for a in p["output_arcs"]}
 
     def compute(op, a, b):
-        return alu_numpy(op, a, b, dtype)
+        return _alu_numpy(op, a, b, dtype)   # caller holds the errstate
 
     def truthy(v):
         return np.asarray(v).ravel()[0] != 0

@@ -16,6 +16,14 @@ engine (latency/throughput in cycles) and the compiled stream backend
 (vmap over the token stream) run them.
 
 Every builder returns ``Bench(graph, make_feeds, reference, out_arc)``.
+
+The ``*_traced`` / ``horner`` / ``saxpy`` / ``relu_chain`` entries are
+*synthesized* fabrics: ordinary Python expressions lowered through the
+:mod:`repro.front` tracing frontend (the paper's algorithm-to-graph
+toolchain step) instead of hand-assembled node tables.  Three of them
+regenerate hand-built benches above — property tests pin the traced
+fabric to the hand-built reference — and three are traced-only
+workloads.
 """
 from __future__ import annotations
 
@@ -281,6 +289,178 @@ def fir_filter_graph(taps: int = 8) -> Bench:
     return Bench(g, make_feeds, reference, "fir")
 
 
+# ---------------------------------------------------------------------------
+# Traced fabrics (synthesized by the repro.front expression frontend)
+# ---------------------------------------------------------------------------
+# Three regenerate hand-assembled benches above from plain Python (the
+# paper's algorithm->graph toolchain step), three are traced-only
+# workloads no one hand-assembled.  `from repro.front import trace` is
+# deferred into each builder: front depends on this module's fan-out /
+# reduce-tree helpers.
+
+def traced_dot_product_graph(n: int = 32) -> Bench:
+    """dot_product_graph regenerated from traced Python: the same
+    multiply-accumulate math written as an ordinary expression (a
+    left-fold chain rather than the hand-built reduce tree — same
+    values bit-for-bit in integer arithmetic)."""
+    from repro.front import trace
+
+    def dot(*ab):
+        a, b = ab[:n], ab[n:]
+        acc = a[0] * b[0]
+        for i in range(1, n):
+            acc = acc + a[i] * b[i]
+        return acc
+
+    prog = trace(dot, *([np.int32] * (2 * n)),
+                 name=f"dot_prod_traced_{n}")
+
+    def make_feeds(a, b):
+        a = np.atleast_2d(np.asarray(a))
+        b = np.atleast_2d(np.asarray(b))
+        return prog.make_feeds(*(a[:, i] for i in range(n)),
+                               *(b[:, i] for i in range(n)))
+
+    return Bench(prog, make_feeds,
+                 lambda a, b: (np.atleast_2d(a) * np.atleast_2d(b))
+                 .sum(axis=1), prog.out_arc)
+
+
+def traced_popcount_graph(bits: int = 16) -> Bench:
+    """popcount_graph regenerated from traced Python: shift/mask/add
+    over the word's bits, exactly the paper's pop-count fabric but
+    synthesized from the expression (the ``x >> 0`` tap is a no-op the
+    identity-elimination pass splices out, like fir's c0)."""
+    from repro.front import trace
+
+    def popc(x):
+        acc = (x >> 0) & 1
+        for k in range(1, bits):
+            acc = acc + ((x >> k) & 1)
+        return acc
+
+    prog = trace(popc, np.int32, name=f"pop_count_traced_{bits}")
+
+    def make_feeds(x):
+        return prog.make_feeds(np.atleast_1d(np.asarray(x)))
+
+    def reference(x):
+        x = np.atleast_1d(np.asarray(x)).astype(np.int32)
+        return np.array([bin(int(v) & ((1 << bits) - 1)).count("1")
+                         for v in x])
+
+    return Bench(prog, make_feeds, reference, prog.out_arc)
+
+
+def traced_fir_graph(taps: int = 8) -> Bench:
+    """fir_filter_graph regenerated from traced Python with the
+    coefficients bound as sticky const buses (``trace(const_args=...)``
+    — the paper's persistently-presented input buses), so the fabric
+    carries the same MUL-by-const taps as the hand-built bench."""
+    from repro.front import trace
+    coeffs = [((3 * k) % 7) + 1 for k in range(taps)]   # same as fir
+
+    def fir(*args):
+        xs, cs = args[:taps], args[taps:]
+        acc = xs[0] * cs[0]
+        for k in range(1, taps):
+            acc = acc + xs[k] * cs[k]
+        return acc
+
+    prog = trace(fir, *([np.int32] * (2 * taps)),
+                 name=f"fir_traced_{taps}",
+                 const_args={taps + k: c for k, c in enumerate(coeffs)})
+
+    def make_feeds(x):
+        x = np.atleast_1d(np.asarray(x))
+        if x.shape[0] < taps:
+            raise ValueError(
+                f"fir_traced_{taps} needs a signal of at least {taps} "
+                f"samples, got {x.shape[0]}")
+        T = x.shape[0] - taps + 1
+        return prog.make_feeds(*(x[taps - 1 - k: taps - 1 - k + T]
+                                 for k in range(taps)))
+
+    def reference(x):
+        x = np.atleast_1d(np.asarray(x)).astype(np.int64)
+        return np.convolve(x, np.asarray(coeffs), "valid").astype(np.int64)
+
+    return Bench(prog, make_feeds, reference, prog.out_arc)
+
+
+def horner_graph(degree: int = 5) -> Bench:
+    """Traced-only bench: Horner evaluation of a fixed int polynomial,
+    ``(((c0 x + c1) x + c2) ...)`` — a deep multiply-add chain that
+    pipelines through the fabric one token per wave."""
+    from repro.front import trace
+    coeffs = [((2 * k + 1) % 9) - 4 for k in range(degree + 1)]
+
+    def horner(x):
+        acc = coeffs[0] * x + coeffs[1]
+        for c in coeffs[2:]:
+            acc = acc * x + c
+        return acc
+
+    prog = trace(horner, np.int32, name=f"horner_{degree}")
+
+    def make_feeds(x):
+        return prog.make_feeds(np.atleast_1d(np.asarray(x)))
+
+    def reference(x):
+        x = np.atleast_1d(np.asarray(x)).astype(np.int32)
+        acc = np.full_like(x, coeffs[0]) * x + np.int32(coeffs[1])
+        for c in coeffs[2:]:
+            acc = acc * x + np.int32(c)     # int32 wrap, like the fabric
+        return acc
+
+    return Bench(prog, make_feeds, reference, prog.out_arc)
+
+
+def saxpy_graph(a: int = 3) -> Bench:
+    """Traced-only bench: ``a*x + y`` over two token streams."""
+    from repro.front import trace
+
+    prog = trace(lambda x, y: a * x + y, np.int32, np.int32,
+                 name=f"saxpy_{a}")
+
+    def make_feeds(x, y):
+        return prog.make_feeds(np.atleast_1d(np.asarray(x)),
+                               np.atleast_1d(np.asarray(y)))
+
+    def reference(x, y):
+        return (np.int32(a) * np.atleast_1d(np.asarray(x)).astype(np.int32)
+                + np.atleast_1d(np.asarray(y)).astype(np.int32))
+
+    return Bench(prog, make_feeds, reference, prog.out_arc)
+
+
+def relu_chain_graph() -> Bench:
+    """Traced-only bench: clamp/relu chain with a data-dependent
+    ``jnp.where`` — the select lowering (BRANCH pair + DMERGE) running
+    on every backend, including the Pallas block kernels."""
+    from repro.front import trace
+    import jax.numpy as jnp
+
+    def relu_chain(x, y):
+        h = jnp.maximum(x - y, 0)               # relu
+        h = jnp.minimum(h * 2 + 1, 100)         # clamp
+        return jnp.where(h > 50, h - 50, h)
+
+    prog = trace(relu_chain, np.int32, np.int32, name="relu_chain")
+
+    def make_feeds(x, y):
+        return prog.make_feeds(np.atleast_1d(np.asarray(x)),
+                               np.atleast_1d(np.asarray(y)))
+
+    def reference(x, y):
+        x = np.atleast_1d(np.asarray(x)).astype(np.int32)
+        y = np.atleast_1d(np.asarray(y)).astype(np.int32)
+        h = np.minimum(np.maximum(x - y, 0) * 2 + 1, 100)
+        return np.where(h > 50, h - 50, h)
+
+    return Bench(prog, make_feeds, reference, prog.out_arc)
+
+
 BENCHES: dict[str, Callable[[], Bench]] = {
     "fibonacci": fibonacci_graph,
     "vector_sum": vector_sum_graph,
@@ -289,6 +469,13 @@ BENCHES: dict[str, Callable[[], Bench]] = {
     "bubble_sort": bubble_sort_graph,
     "pop_count": popcount_graph,
     "fir": fir_filter_graph,
+    # synthesized by the repro.front tracing frontend
+    "dot_prod_traced": traced_dot_product_graph,
+    "pop_count_traced": traced_popcount_graph,
+    "fir_traced": traced_fir_graph,
+    "horner": horner_graph,
+    "saxpy": saxpy_graph,
+    "relu_chain": relu_chain_graph,
 }
 
 
@@ -301,13 +488,18 @@ def random_feeds(name: str, bench: Bench, k: int, rng=None) -> dict:
     n = len(bench.graph.input_arcs())
     if name == "fibonacci":
         return bench.make_feeds(int(k))
-    if name == "dot_prod":
+    if name.startswith("dot_prod"):
         return bench.make_feeds(rng.integers(0, 9, (k, n // 2)),
                                 rng.integers(0, 9, (k, n // 2)))
-    if name == "pop_count":
+    if name.startswith("pop_count"):
         return bench.make_feeds(rng.integers(0, 2 ** 16, (k,)))
-    if name == "fir":
+    if name.startswith("fir"):
         return bench.make_feeds(rng.integers(0, 99, (k + n - 1,)))
+    if name.startswith("horner"):
+        return bench.make_feeds(rng.integers(0, 10, (k,)))
+    if name.startswith(("saxpy", "relu_chain")):
+        return bench.make_feeds(rng.integers(0, 99, (k,)),
+                                rng.integers(0, 99, (k,)))
     return bench.make_feeds(rng.integers(0, 99, (k, n)))
 
 

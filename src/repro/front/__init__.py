@@ -1,0 +1,24 @@
+"""Expression-to-fabric frontend (DESIGN.md §9).
+
+The paper's toolchain starts from an *algorithm* and synthesizes the
+static dataflow graph of operators that computes it; this package is
+that synthesis step for ordinary jax-traceable Python: ``trace(fn,
+*avals)`` captures the program as a jaxpr and lowers every equation
+onto the Veen operator set of :mod:`repro.core.graph`, so any scalar
+(token-shaped) expression becomes a fabric the cycle-accurate engines,
+the compiled backends, and the continuous-batching server can run.
+
+    from repro.front import trace
+    prog = trace(lambda x, y: jnp.where(x > y, x - y, y - x),
+                 np.int32, np.int32)
+    eng = DataflowEngine(prog, backend="pallas", block_cycles=16)
+    res = eng.run(prog.make_feeds([5, 1], [2, 9]))
+    res.outputs[prog.out_arcs[0]]      # -> [3, 8]
+
+Unsupported jaxpr primitives raise :class:`LoweringError` naming the
+primitive; see :data:`repro.front.lowering.SUPPORTED` for the table.
+"""
+from repro.front.lowering import SUPPORTED, LoweringError
+from repro.front.tracer import TracedProgram, trace
+
+__all__ = ["trace", "TracedProgram", "LoweringError", "SUPPORTED"]

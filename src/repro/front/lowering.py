@@ -1,0 +1,434 @@
+"""jaxpr-equation -> fabric-operator lowering rules (DESIGN.md §9).
+
+One rule per jaxpr primitive.  The arithmetic/logic/relational
+primitives map 1:1 onto :class:`~repro.core.graph.Op`; everything else
+is a *schema* over several operators:
+
+* fan-out — an arc carries one receiver, so a value consumed by k
+  equations becomes a COPY tree (``library._fanout``);
+* ``select_n`` (``jnp.where`` / ``lax.select``) — the classical
+  dataflow conditional: each data operand rides a BRANCH steered by the
+  predicate (the untaken side is SINKed) and a DMERGE reunites the
+  taken tokens, so *both* operands are consumed every firing and the
+  fabric streams without stale tokens;
+* ``neg`` / ``abs`` / ``integer_pow`` / ``clamp`` — expanded into
+  SUB/MUL/MAX/MIN trees that are bit-exact at the execution dtype
+  (``neg`` is ``0 - x`` for ints, ``x * -1`` for floats, so ``-0.0``
+  and INT_MIN behave exactly like jax);
+* constants — jaxpr literals and closure consts become sticky const
+  buses (always-full environment arcs), which is what lets the PR 3
+  constant-folding pass collapse constant subexpressions at compile
+  time;
+* ``pjit`` / ``custom_jvp_call`` etc. — inlined recursively.
+
+Anything else raises :class:`LoweringError` naming the primitive.
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from repro.core.graph import Graph, Op
+from repro.core.library import _fanout, _reduce_tree
+
+
+class LoweringError(Exception):
+    """A traced program contains an equation the fabric cannot run."""
+
+
+# primitive name -> Op / schema note (the DESIGN.md §9 lowering table;
+# also the vocabulary quoted by LoweringError messages)
+SUPPORTED = {
+    "add": "ADD", "sub": "SUB", "mul": "MUL",
+    "div": "DIV (float dtypes only; the fabric ALU defines x/0 = 0)",
+    "max": "MAX", "min": "MIN",
+    "and": "AND", "or": "OR", "xor": "XOR", "not": "NOT",
+    "shift_left": "SHL",
+    "shift_right_arithmetic": "SHR (signed dtypes)",
+    "shift_right_logical": "SHR (unsigned dtypes)",
+    "gt": "IFGT", "ge": "IFGE", "lt": "IFLT", "le": "IFLE",
+    "eq": "IFEQ", "ne": "IFDF",
+    "select_n": "BRANCH x2 + SINK x2 + DMERGE (2-way, bool predicate)",
+    "neg": "SUB(0, x) int / MUL(x, -1) float",
+    "abs": "COPY + neg + MAX",
+    "integer_pow": "MUL tree (int dtypes, y >= 0)",
+    "clamp": "MAX + MIN",
+    "convert_element_type": "alias (bool->dtype / same dtype) or "
+                            "IFDF(x, 0) (dtype->bool)",
+    "stop_gradient": "alias",
+    "broadcast_in_dim": "alias (scalar)", "reshape": "alias (scalar)",
+    "squeeze": "alias (scalar)",
+    "pjit": "inlined", "closed_call": "inlined",
+    "custom_jvp_call": "inlined", "custom_vjp_call": "inlined",
+}
+
+_BINOP = {
+    "add": Op.ADD, "sub": Op.SUB, "mul": Op.MUL,
+    "max": Op.MAX, "min": Op.MIN,
+    "and": Op.AND, "or": Op.OR, "xor": Op.XOR,
+    "shift_left": Op.SHL,
+    "gt": Op.IFGT, "ge": Op.IFGE, "lt": Op.IFLT, "le": Op.IFLE,
+    "eq": Op.IFEQ, "ne": Op.IFDF,
+}
+# `a op b == b op a` bit-exactly at any dtype (engine ALU formulas):
+# used to put a const operand on the b side, where the identity-
+# elimination pass looks for it.
+_COMMUTATIVE = frozenset(
+    ("add", "mul", "max", "min", "and", "or", "xor", "eq", "ne"))
+_ALIAS = ("stop_gradient", "broadcast_in_dim", "reshape", "squeeze")
+_CALL = ("pjit", "closed_call", "custom_jvp_call", "custom_vjp_call")
+
+
+def _is_literal(atom) -> bool:
+    return not hasattr(atom, "count")    # jax core Var has .count
+
+
+class _Ctx:
+    """Lowering state: per-var arc supplies, use counts, taint."""
+
+    def __init__(self, graph: Graph, dtype):
+        self.graph = graph
+        self.dtype = np.dtype(dtype)
+        self.supply: dict = {}     # Var -> list[str] queue | str const arc
+        self.uses: dict = {}       # Var -> planned consumer count
+        self.streamy: dict = {}    # Var -> depends on an env stream?
+        self.env_inputs: set[str] = set()
+        self.const_args: dict[int, object] = {}   # arg index -> value
+        self._n = itertools.count()
+        self._lits: dict = {}
+
+    def fresh(self, tag: str = "v") -> str:
+        return f"{tag}{next(self._n)}"
+
+    # -- constants ------------------------------------------------------
+    def lit(self, value) -> str:
+        """Const bus for a compile-time scalar (deduped by value bits —
+        const arcs are sticky and may feed many receivers)."""
+        v = np.asarray(value, self.dtype).reshape(()).item()
+        key = repr(v)
+        arc = self._lits.get(key)
+        if arc is None:
+            arc = self.fresh("lit")
+            self.graph.const(arc, v)
+            self._lits[key] = arc
+        return arc
+
+    # -- supplies -------------------------------------------------------
+    def use(self, atom) -> str:
+        """Claim one arc carrying the atom's value."""
+        if _is_literal(atom):
+            return self.lit(atom.val)
+        s = self.supply[atom]
+        return s if isinstance(s, str) else s.pop(0)
+
+    def is_streamy(self, atom) -> bool:
+        return (not _is_literal(atom)) and self.streamy.get(atom, False)
+
+    def bind(self, var, arc: str, streamy: bool = True) -> None:
+        """Register `arc` as var's value, fanning out through a COPY
+        tree when the var has several consumers and SINKing it when it
+        has none (a produced token must always find a receiver, or the
+        arc would surface as a spurious environment output)."""
+        u = self.uses.get(var, 0)
+        if u == 0:
+            self.graph.add(Op.SINK, [arc], [])
+            self.supply[var] = []
+        elif u == 1:
+            self.supply[var] = [arc]
+        else:
+            self.supply[var] = _fanout(self.graph, arc, u, arc + "f")
+        self.streamy[var] = streamy
+
+    def bind_const(self, var, arc: str) -> None:
+        self.supply[var] = arc      # sticky bus: unlimited receivers
+        self.streamy[var] = False
+
+
+def _err(eqn, why: str) -> LoweringError:
+    return LoweringError(
+        f"primitive '{eqn.primitive.name}' {why} "
+        f"(fabric lowering table: {sorted(SUPPORTED)})")
+
+
+def _aval_dtype(atom):
+    return np.dtype(atom.aval.dtype) if not _is_literal(atom) \
+        else np.dtype(np.asarray(atom.val).dtype)
+
+
+def _convert_kind(ctx: _Ctx, eqn) -> str:
+    """alias | ne0 — or raise for a conversion the fabric cannot carry
+    (arcs hold one dtype; deciders already emit 0/1 at that dtype)."""
+    src = _aval_dtype(eqn.invars[0])
+    dst = np.dtype(eqn.params["new_dtype"])
+    if src == dst or (src == np.bool_ and dst == ctx.dtype):
+        return "alias"
+    if dst == np.bool_ and src == ctx.dtype:
+        return "ne0"
+    raise _err(eqn, f"converts {src} -> {dst}, but every arc of this "
+                    f"fabric carries {ctx.dtype} tokens")
+
+
+def _pow_uses(eqn, uses) -> int:
+    y = int(eqn.params["y"])
+    if y == 1:
+        return uses.get(eqn.outvars[0], 0)      # pure alias
+    return max(y, 0)
+
+
+def _multiplicities(ctx: _Ctx, eqn, uses) -> list[int]:
+    """How many arcs of each operand the eqn's lowering will claim.
+    ``uses`` holds the (already complete, thanks to reverse iteration)
+    consumer counts of the eqn's outvars — alias lowerings forward
+    their output's demand straight to their input."""
+    name = eqn.primitive.name
+    if name == "select_n":
+        return [3] + [1] * (len(eqn.invars) - 1)
+    if name == "abs":
+        return [2]
+    if name == "integer_pow":
+        return [_pow_uses(eqn, uses)]
+    if name in _ALIAS:
+        return [uses.get(eqn.outvars[0], 0)]
+    if name == "convert_element_type" and _convert_kind(ctx, eqn) == "alias":
+        return [uses.get(eqn.outvars[0], 0)]
+    return [1] * len(eqn.invars)
+
+
+def _bind_alias(ctx: _Ctx, outvar, atom) -> None:
+    """outvar shares atom's arcs (its demand was pre-charged to atom)."""
+    if _is_literal(atom):
+        ctx.bind_const(outvar, ctx.lit(atom.val))
+        return
+    s = ctx.supply[atom]
+    if isinstance(s, str):
+        ctx.bind_const(outvar, s)
+    else:
+        arcs = [ctx.use(atom) for _ in range(ctx.uses.get(outvar, 0))]
+        ctx.supply[outvar] = arcs
+        ctx.streamy[outvar] = ctx.is_streamy(atom)
+
+
+def _lower_eqn(ctx: _Ctx, eqn) -> None:
+    name = eqn.primitive.name
+    g, dtype = ctx.graph, ctx.dtype
+    is_int = np.issubdtype(dtype, np.integer)
+    out = eqn.outvars[0] if eqn.outvars else None
+
+    if name in _BINOP or name == "div" or name.startswith("shift_right"):
+        if name == "div":
+            if is_int:
+                raise _err(eqn, "is round-toward-zero integer division "
+                                "(jnp `//` also routes through `rem`); "
+                                "the fabric DIV is float-only — use "
+                                "shifts for powers of two")
+            op = Op.DIV
+        elif name == "shift_right_arithmetic":
+            if not is_int or np.issubdtype(dtype, np.unsignedinteger):
+                raise _err(eqn, "needs a signed integer dtype")
+            op = Op.SHR
+        elif name == "shift_right_logical":
+            if not np.issubdtype(dtype, np.unsignedinteger):
+                raise _err(eqn, "is a logical shift; the fabric SHR is "
+                                "arithmetic for signed dtypes — use an "
+                                "unsigned dtype")
+            op = Op.SHR
+        else:
+            op = _BINOP[name]
+        a, b = eqn.invars
+        if (name in _COMMUTATIVE and not ctx.is_streamy(a)
+                and ctx.is_streamy(b)):
+            a, b = b, a          # const operand on the b side (passes
+            #                      splice identities off inputs[1])
+        streamy = ctx.is_streamy(a) or ctx.is_streamy(b)
+        arc = ctx.fresh()
+        g.add(op, [ctx.use(a), ctx.use(b)], [arc])
+        ctx.bind(out, arc, streamy)
+        return
+
+    if name == "not":
+        arc = ctx.fresh()
+        g.add(Op.NOT, [ctx.use(eqn.invars[0])], [arc])
+        ctx.bind(out, arc, ctx.is_streamy(eqn.invars[0]))
+        return
+
+    if name == "neg":
+        x = eqn.invars[0]
+        arc = ctx.fresh()
+        if is_int:
+            g.add(Op.SUB, [ctx.lit(0), ctx.use(x)], [arc])
+        else:           # 0.0 - x flips -0.0; x * -1.0 is bit-exact
+            g.add(Op.MUL, [ctx.use(x), ctx.lit(-1)], [arc])
+        ctx.bind(out, arc, ctx.is_streamy(x))
+        return
+
+    if name == "abs":
+        x = eqn.invars[0]
+        x0, x1 = ctx.use(x), ctx.use(x)
+        nn = ctx.fresh()
+        if is_int:
+            g.add(Op.SUB, [ctx.lit(0), x1], [nn])
+        else:
+            g.add(Op.MUL, [x1, ctx.lit(-1)], [nn])
+        arc = ctx.fresh()
+        g.add(Op.MAX, [x0, nn], [arc])    # MAX(+0,-0)=+0 matches |−0.0|
+        ctx.bind(out, arc, ctx.is_streamy(x))
+        return
+
+    if name == "integer_pow":
+        x = eqn.invars[0]
+        y = int(eqn.params["y"])
+        if y < 0:
+            raise _err(eqn, f"has negative exponent y={y}")
+        if y == 0:
+            ctx.bind_const(out, ctx.lit(1))
+            return
+        if y == 1:
+            _bind_alias(ctx, out, x)
+            return
+        if not is_int:
+            raise _err(eqn, "expands to a MUL tree whose rounding "
+                            "order is only bit-exact for integer "
+                            "dtypes — spell out float powers as "
+                            "explicit multiplies")
+        arcs = [ctx.use(x) for _ in range(y)]
+        arc = ctx.fresh()
+        _reduce_tree(g, arcs, Op.MUL, arc + "p", final=arc)
+        ctx.bind(out, arc, ctx.is_streamy(x))
+        return
+
+    if name == "clamp":
+        lo, x, hi = eqn.invars    # lax.clamp(min, operand, max)
+        t, arc = ctx.fresh(), ctx.fresh()
+        g.add(Op.MAX, [ctx.use(x), ctx.use(lo)], [t])
+        g.add(Op.MIN, [t, ctx.use(hi)], [arc])
+        ctx.bind(out, arc, any(ctx.is_streamy(v) for v in eqn.invars))
+        return
+
+    if name == "select_n":
+        pred = eqn.invars[0]
+        if len(eqn.invars) != 3:
+            raise _err(eqn, f"has {len(eqn.invars) - 1} cases; only "
+                            "2-way (boolean) selects lower")
+        if _aval_dtype(pred) != np.bool_:
+            raise _err(eqn, "has a non-boolean selector")
+        fv, tv = eqn.invars[1], eqn.invars[2]   # select_n: cases[pred]
+        c_t, c_f, c_m = ctx.use(pred), ctx.use(pred), ctx.use(pred)
+        t_live, t_dead = ctx.fresh(), ctx.fresh()
+        f_live, f_dead = ctx.fresh(), ctx.fresh()
+        g.add(Op.BRANCH, [ctx.use(tv), c_t], [t_live, t_dead])
+        g.add(Op.SINK, [t_dead], [])
+        g.add(Op.BRANCH, [ctx.use(fv), c_f], [f_dead, f_live])
+        g.add(Op.SINK, [f_dead], [])
+        arc = ctx.fresh()
+        g.add(Op.DMERGE, [t_live, f_live, c_m], [arc])
+        ctx.bind(out, arc, any(ctx.is_streamy(v) for v in eqn.invars))
+        return
+
+    if name == "convert_element_type":
+        x = eqn.invars[0]
+        if _convert_kind(ctx, eqn) == "alias":
+            _bind_alias(ctx, out, x)
+        else:                     # dtype -> bool: x != 0
+            arc = ctx.fresh()
+            g.add(Op.IFDF, [ctx.use(x), ctx.lit(0)], [arc])
+            ctx.bind(out, arc, ctx.is_streamy(x))
+        return
+
+    if name in _ALIAS:
+        aval = getattr(eqn.outvars[0], "aval", None)
+        if aval is not None and tuple(aval.shape) != ():
+            raise _err(eqn, f"produces shape {tuple(aval.shape)}; the "
+                            "fabric carries scalar tokens")
+        _bind_alias(ctx, out, eqn.invars[0])
+        return
+
+    if name in _CALL:
+        inner = None
+        for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+            cand = eqn.params.get(key)
+            if cand is not None and hasattr(cand, "jaxpr"):
+                inner = cand
+                break
+        if inner is None:
+            raise _err(eqn, "has no inlinable sub-jaxpr")
+        supplies = [(ctx.use(v), ctx.is_streamy(v)) for v in eqn.invars]
+        results = lower_jaxpr(ctx, inner.jaxpr, inner.consts, supplies)
+        for var, (arc, streamy) in zip(eqn.outvars, results):
+            if arc in ctx.graph.consts:
+                ctx.bind_const(var, arc)
+            else:
+                ctx.bind(var, arc, streamy)
+        return
+
+    raise _err(eqn, "has no fabric lowering")
+
+
+def lower_jaxpr(ctx: _Ctx, jaxpr, const_vals, in_arcs
+                ) -> list[tuple[str, bool]]:
+    """Lower one jaxpr scope onto ctx.graph.
+
+    in_arcs: one ``(arc, streamy)`` pair per invar — or None (top
+    level) to create an environment input arc ``in{i}`` on demand,
+    recording the created names (None for unused args) in
+    ``ctx.created_inputs``.  Returns ``(arc, streamy)`` per outvar;
+    unused invar arcs handed in by a caller are SINKed so every token
+    still finds a receiver.
+    """
+    # 1. demand counting, in reverse so alias chains see their own
+    #    consumers before charging their inputs
+    uses: dict = {}
+
+    def charge(atom, m):
+        if not _is_literal(atom) and m:
+            uses[atom] = uses.get(atom, 0) + m
+
+    for v in jaxpr.outvars:
+        charge(v, 1)
+    for eqn in reversed(jaxpr.eqns):
+        for atom, m in zip(eqn.invars, _multiplicities(ctx, eqn, uses)):
+            charge(atom, m)
+    ctx.uses.update(uses)
+
+    # 2. bind closure consts and arguments
+    for var, val in zip(jaxpr.constvars, const_vals):
+        val = np.asarray(val)
+        if val.shape != ():
+            raise LoweringError(
+                f"closure constant of shape {val.shape} cannot ride a "
+                "scalar-token arc (fabric tokens are 0-d)")
+        ctx.bind_const(var, ctx.lit(val))
+    if in_arcs is None:                 # top level: environment streams
+        created: list[str | None] = []
+        for i, var in enumerate(jaxpr.invars):
+            if i in ctx.const_args:     # sticky const bus, not a stream
+                if ctx.uses.get(var, 0):
+                    ctx.bind_const(var, ctx.lit(ctx.const_args[i]))
+                continue
+            if ctx.uses.get(var, 0) == 0:
+                created.append(None)    # unused argument: no arc at all
+                continue
+            arc = f"in{i}"
+            ctx.env_inputs.add(arc)
+            created.append(arc)
+            ctx.bind(var, arc, streamy=True)
+        ctx.created_inputs = created
+    else:                               # inlined call: arcs handed in
+        for var, (arc, streamy) in zip(jaxpr.invars, in_arcs):
+            if arc in ctx.graph.consts:
+                ctx.bind_const(var, arc)
+            else:
+                ctx.bind(var, arc, streamy)
+
+    # 3. equations in program order
+    for eqn in jaxpr.eqns:
+        _lower_eqn(ctx, eqn)
+
+    # 4. outputs
+    results = []
+    for v in jaxpr.outvars:
+        if _is_literal(v):
+            results.append((ctx.lit(v.val), False))
+        else:
+            results.append((ctx.use(v), ctx.is_streamy(v)))
+    return results

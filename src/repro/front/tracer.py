@@ -1,0 +1,163 @@
+"""``trace(fn, *avals) -> TracedProgram``: capture a scalar jax
+program as a jaxpr and synthesize its static dataflow fabric.
+
+A :class:`TracedProgram` IS a :class:`~repro.core.graph.Graph` — it
+runs on every engine backend, serializes through ``asm.emit`` (so the
+:mod:`repro.serve.dataflow_server` compiled-plan cache treats a traced
+program as just another fabric signature), and optimizes through
+``core.passes`` — plus the frontend bookkeeping: which environment arc
+carries which positional argument (``arg_arcs``), which arcs drain the
+program's results (``out_arcs``), and the feed adapter
+(:meth:`TracedProgram.make_feeds`) that turns positional token streams
+into the engine's arc->stream dict.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.front.adapter import pack_arg_streams
+from repro.front.lowering import _Ctx, LoweringError, lower_jaxpr
+
+
+@dataclasses.dataclass
+class TracedProgram(Graph):
+    """A fabric synthesized from a traced Python program.
+
+    arg_arcs: one entry per *stream* argument (positional arguments
+      minus any const-bound via ``trace(const_args=...)``) — the input
+      arc fed by that argument's token stream, or None when the
+      argument is unused (the adapter then ignores its stream).
+    out_arcs: one output arc per program result, in return order.
+    dtype:   the fabric's execution dtype (all avals share it).
+    """
+    arg_arcs: list = dataclasses.field(default_factory=list)
+    out_arcs: list = dataclasses.field(default_factory=list)
+    dtype: object = np.dtype(np.int32)
+
+    def make_feeds(self, *args) -> dict:
+        """Feed adapter: positional [k]-token streams (scalars
+        broadcast to the common k) -> arc->stream dict for the
+        engines, ``run_batch``, and ``DataflowServer`` requests."""
+        return pack_arg_streams(self.name, self.arg_arcs, self.dtype,
+                                args)
+
+    @property
+    def out_arc(self) -> str:
+        return self.out_arcs[0]
+
+
+def _canon_aval(a, index: int):
+    """Normalize one `avals` entry (dtype-like, ShapeDtypeStruct, or
+    example scalar) to a canonical scalar dtype."""
+    if isinstance(a, jax.ShapeDtypeStruct):
+        if tuple(a.shape) != ():
+            raise LoweringError(
+                f"aval {index} has shape {tuple(a.shape)}; the fabric "
+                "carries scalar (token-shaped) values — stream tensors "
+                "element-wise instead")
+        dt = a.dtype
+    elif isinstance(a, (str, np.dtype)) or (isinstance(a, type)
+                                            and issubclass(a, np.generic)):
+        dt = np.dtype(a)
+    elif isinstance(a, (bool, int)):
+        dt = np.dtype(np.int32)
+    elif isinstance(a, float):
+        dt = np.dtype(np.float32)
+    elif np.ndim(a) == 0:
+        dt = np.asarray(a).dtype
+    else:
+        raise LoweringError(
+            f"aval {index} ({a!r}) is neither a scalar dtype spec nor "
+            "a scalar example value")
+    dt = np.dtype(jax.dtypes.canonicalize_dtype(dt))
+    if dt == np.bool_ or np.issubdtype(dt, np.complexfloating):
+        raise LoweringError(
+            f"aval {index} has dtype {dt}; fabric tokens are integer "
+            "or float words (deciders encode booleans as 0/1)")
+    return dt
+
+
+def trace(fn, *avals, name: str | None = None,
+          const_args: dict | None = None) -> TracedProgram:
+    """Lower a jax-traceable scalar program onto fabric operators.
+
+    avals: one scalar dtype spec (or example value) per positional
+    argument of ``fn``; all must share one dtype — the fabric's
+    execution dtype.  Raises :class:`LoweringError` (naming the
+    offending primitive) when the program uses an equation the Veen
+    operator set cannot express.
+
+    const_args: {arg index: value} binds those arguments as *sticky
+    const buses* (the paper's persistently-presented input buses, e.g.
+    FIR coefficients) instead of token streams.  Operators fed only by
+    const buses are genuine compile-time work — exactly what the PR 3
+    constant-folding pass collapses.  Const-bound arguments take no
+    stream: ``make_feeds`` expects one stream per *remaining*
+    argument, in position order.
+    """
+    if not avals:
+        raise LoweringError(
+            "trace() needs at least one aval: a fabric with no input "
+            "streams would free-run its constant outputs")
+    const_args = dict(const_args or {})
+    bad = [i for i in const_args if not 0 <= i < len(avals)]
+    if bad:
+        raise LoweringError(
+            f"const_args indices {sorted(bad)} out of range for "
+            f"{len(avals)} traced arguments")
+    if len(const_args) == len(avals):
+        raise LoweringError(
+            "every argument is const-bound: a fabric with no input "
+            "streams would free-run its constant outputs")
+    dts = [_canon_aval(a, i) for i, a in enumerate(avals)]
+    if len(set(dts)) != 1:
+        raise LoweringError(
+            f"mixed aval dtypes {sorted({str(d) for d in dts})}: every "
+            "arc of one fabric carries one dtype")
+    dtype = dts[0]
+    name = name or getattr(fn, "__name__", None) or "traced"
+    if name == "<lambda>":
+        name = "traced"
+    closed = jax.make_jaxpr(fn)(
+        *[jax.ShapeDtypeStruct((), dt) for dt in dts])
+    for v in closed.jaxpr.outvars:
+        aval = getattr(v, "aval", None)
+        if aval is not None and tuple(aval.shape) != ():
+            raise LoweringError(
+                f"program returns shape {tuple(aval.shape)}; fabric "
+                "output buses drain scalar tokens")
+
+    prog = TracedProgram(name=name, dtype=dtype)
+    ctx = _Ctx(prog, dtype)
+    ctx.const_args = const_args
+    results = lower_jaxpr(ctx, closed.jaxpr, closed.consts, None)
+    prog.arg_arcs = list(ctx.created_inputs)
+
+    out_arcs = []
+    for k, (arc, streamy) in enumerate(results):
+        if not streamy:
+            raise LoweringError(
+                f"program output {k} is a compile-time constant; a "
+                "const output bus free-runs (one token per cycle, "
+                "forever) — return something derived from an argument")
+        if arc in ctx.env_inputs:
+            # a bare passthrough would leave the arc both fed and
+            # drained by the environment; give it a real operator so
+            # the arc classes stay disjoint
+            from repro.core.graph import Op
+            out, dead = ctx.fresh("out"), ctx.fresh("dead")
+            prog.add(Op.COPY, [arc], [out, dead])
+            prog.add(Op.SINK, [dead], [])
+            arc = out
+        out_arcs.append(arc)
+    prog.out_arcs = out_arcs
+    # a const arc no node reads (e.g. an unused const-bound argument)
+    # would surface as a free-running environment output bus — prune
+    used = {a for n in prog.nodes for a in (*n.inputs, *n.outputs)}
+    prog.consts = {a: v for a, v in prog.consts.items() if a in used}
+    prog.validate()
+    return prog

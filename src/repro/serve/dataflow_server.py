@@ -29,6 +29,11 @@ carries its own cycle clock, so every request's
 it alone via ``DataflowEngine.run`` — regardless of what rides the
 other slots or of admission order (property-tested in
 tests/test_dataflow_server.py).
+
+Traced programs (:mod:`repro.front`, DESIGN.md §9) serve through the
+same machinery: a ``TracedProgram`` is a ``Graph``, so its assembler
+emission is its cache signature like any hand-assembled fabric —
+:meth:`DataflowServer.for_fn` traces and serves in one step.
 """
 from __future__ import annotations
 
@@ -158,6 +163,29 @@ class DataflowServer:
         self._queued_at: dict[int, int] = {}     # uid -> block at submit
         self._resident: dict[int, tuple[Request, int]] = {}  # slot -> (req, admitted)
         self._auto_uid = 0
+
+    @classmethod
+    def for_fn(cls, fn, *avals, const_args=None, name=None,
+               **server_kw) -> "DataflowServer":
+        """Serve a traced Python program: lower ``fn`` through the
+        :mod:`repro.front` frontend and build the server on the
+        synthesized fabric.  A traced program is just another asm
+        signature to the compiled-plan cache, so structurally-equal
+        traces (across servers, across processes re-tracing the same
+        source) share one engine.  The program's positional feed
+        adapter rides along as ``server.make_feeds``::
+
+            srv = DataflowServer.for_fn(
+                lambda x, y: jnp.where(x > y, x - y, y - x),
+                np.int32, np.int32, slots=8, backend="pallas")
+            srv.submit(srv.make_feeds([5, 1], [2, 9]))
+        """
+        from repro.front import trace
+        prog = trace(fn, *avals, name=name, const_args=const_args)
+        srv = cls(prog, **server_kw)
+        srv.traced = prog
+        srv.make_feeds = prog.make_feeds
+        return srv
 
     # -- admission ------------------------------------------------------
     def submit(self, request) -> int:

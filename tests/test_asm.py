@@ -1,16 +1,23 @@
-"""Assembler round-trip property over the full benchmark library.
+"""Assembler round-trip property over the full benchmark library, and
+the parse error paths (ISSUE 4).
 
-Property: for every graph in core.library.BENCHES,
+Round-trip property: for every graph in core.library.BENCHES,
 ``asm.parse(asm.emit(g))`` reproduces an isomorphic Graph — same node
 table (opcodes + arc wiring), same consts, same derived arc classes —
 and the reproduced fabric behaves identically on the reference engine.
 ``emit`` is also a fixed point after one round trip.
+
+Error paths: malformed statements, unknown opcodes, wrong argument
+counts, and bad/duplicate const declarations raise SyntaxError naming
+the statement; structural violations (duplicate producers/receivers,
+produced const arcs) surface as Graph.validate's ValueError.
 """
 import numpy as np
 import pytest
 
 from repro.core import asm, library
 from repro.core.engine import run_reference
+from repro.core.graph import Graph, Op
 
 
 def _graphs():
@@ -57,3 +64,66 @@ def test_roundtrip_behaves_identically(name):
         if c:
             np.testing.assert_array_equal(np.asarray(got.outputs[a]),
                                           np.asarray(want.outputs[a]))
+
+
+# ---------------------------------------------------------------------------
+# parse error paths
+# ---------------------------------------------------------------------------
+def test_parse_rejects_malformed_statements():
+    with pytest.raises(SyntaxError, match="bad statement"):
+        asm.parse("42;")
+    with pytest.raises(SyntaxError, match="unknown opcode 'frob'"):
+        asm.parse("1. frob a, b, z;")
+    # bad arity: add wants 2 inputs + 1 output
+    with pytest.raises(SyntaxError, match="add wants 2\\+1 args"):
+        asm.parse("add a, z;")
+    with pytest.raises(SyntaxError, match="branch wants 2\\+2 args"):
+        asm.parse("branch a, c, t;")
+
+
+def test_parse_rejects_bad_const_declarations():
+    with pytest.raises(SyntaxError, match="bad const declaration"):
+        asm.parse("const a;")
+    with pytest.raises(SyntaxError, match="bad const declaration"):
+        asm.parse("const a =;")
+    with pytest.raises(SyntaxError, match="bad const value 'xyz'"):
+        asm.parse("const a = xyz;")
+    with pytest.raises(SyntaxError, match="redeclared"):
+        asm.parse("const a = 1; const a = 2;")
+
+
+def test_parse_propagates_structural_validation():
+    # duplicate producer: two nodes write arc z
+    with pytest.raises(ValueError, match="multiple producers"):
+        asm.parse("add x, y, z; sub u, v, z;")
+    # duplicate receiver: two nodes read non-const arc z
+    with pytest.raises(ValueError, match="multiple consumers"):
+        asm.parse("add z, y, w; sub z, v, u;")
+    # a const arc with a producer (dangling const bus wiring)
+    with pytest.raises(ValueError, match="also has a producer"):
+        asm.parse("const z = 1; add x, y, z;")
+    # ...but a const arc MAY fan out to several receivers
+    g = asm.parse("const z = 1; add z, y, w; sub z, v, u;")
+    assert len(g.nodes) == 2
+
+
+def test_const_values_roundtrip_ints_and_floats():
+    g = Graph(name="consts")
+    g.const("i", 7)
+    g.const("neg", -3)
+    g.const("hexy", 255)
+    g.const("half", 0.5)
+    g.const("mzero", -0.0)
+    g.const("intfloat", 3.0)
+    g.add(Op.ADD, ["i", "neg"], ["a"])
+    g.add(Op.ADD, ["hexy", "half"], ["b"])
+    g.add(Op.ADD, ["mzero", "intfloat"], ["c"])
+    text = asm.emit(g)
+    g2 = asm.parse(text)
+    assert g2.consts["i"] == 7 and g2.consts["neg"] == -3
+    assert g2.consts["half"] == 0.5
+    assert g2.consts["mzero"] == 0.0 and np.signbit(g2.consts["mzero"])
+    assert g2.consts["intfloat"] == 3       # integral floats emit as int
+    assert asm.emit(g2) == text             # emit is a fixed point
+    # hex int literals parse (base-0 int syntax)
+    assert asm.parse("const h = 0x10; add h, x, y;").consts["h"] == 16

@@ -1,0 +1,324 @@
+"""Differential fuzzing across every executor (ISSUE 4).
+
+Two unbounded case generators feed one oracle:
+
+* random well-formed acyclic GRAPHS over the full opcode vocabulary
+  (valid ARITY, one producer/receiver per arc, every opcode class
+  reachable across the pool — asserted below);
+* random traceable EXPRESSIONS lowered through the ``repro.front``
+  frontend, whose plain-numpy evaluation is an independent oracle for
+  the synthesized fabric.
+
+Contract per case, against the pure-numpy reference engine:
+
+* optimize off and "spec" engines (xla and pallas, at every block size
+  K) reproduce EVERY EngineResult field bit-identically — even when
+  the run truncates at the cycle cap (free-running const subgraphs are
+  legal fuzz output, and block partitioning must not change capped
+  semantics);
+* optimize "full" engines reproduce the *rewritten* graph's reference
+  run bit-identically, and when the authored fabric quiesces under the
+  cap, the rewritten one drains identical last values and counts.
+
+Scale: the default is the seeded CI quick subset (every backend and
+optimize level; K rotates through {1, 4, 16} across cases).  Set
+``REPRO_FUZZ=full`` for the full local matrix — 16 graph structures
+and 10 expression structures x 8 feed streams each (208 cases, >= 200)
+with the complete K cross product per case.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import passes
+from repro.core.engine import DataflowEngine, run_reference
+from repro.core.graph import ARITY, Graph, Op
+from repro.front import trace
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # CI installs hypothesis; local runs may not
+    HAVE_HYPOTHESIS = False
+
+FULL = os.environ.get("REPRO_FUZZ", "").lower() == "full"
+N_GRAPHS, N_PROGS, N_FEEDS = (16, 10, 8) if FULL else (5, 4, 2)
+KS_ALL = (1, 4, 16)
+CAP = 192                    # cycle cap: free-running fabrics are fine
+
+EDGE_VALS = np.asarray(
+    [-(2 ** 31), -(2 ** 31) + 1, -40, -2, -1, 0, 1, 2, 3, 5,
+     31, 32, 40, 2 ** 31 - 1], np.int64)
+
+
+def _ks(idx):
+    """Full mode: the whole K cross per case; quick: rotate coverage."""
+    return KS_ALL if FULL else (KS_ALL[idx % 3],)
+
+
+# ---------------------------------------------------------------------------
+# generator 1: random well-formed acyclic graphs
+# ---------------------------------------------------------------------------
+ALL_OPS = list(Op)
+
+
+def random_graph(seed: int) -> Graph:
+    """Acyclic by construction: node inputs only consume arcs that
+    already exist (open producer outputs, fresh environment streams,
+    or const buses)."""
+    rng = np.random.default_rng(1000 + seed)
+    g = Graph(name=f"fuzz{seed}")
+    open_arcs: list[str] = []
+    counters = {"a": 0, "x": 0, "c": 0}
+
+    def fresh(tag):
+        counters[tag] += 1
+        return f"{tag}{counters[tag]}"
+
+    def const_arc():
+        arc = fresh("c")
+        g.const(arc, int(rng.choice(EDGE_VALS)))
+        return arc
+
+    def src(force_env=False):
+        r = rng.random()
+        if force_env:
+            return fresh("x")
+        if open_arcs and r < 0.55:
+            return open_arcs.pop(int(rng.integers(len(open_arcs))))
+        if r < 0.75:
+            return const_arc()
+        return fresh("x")
+
+    n_nodes = int(rng.integers(4, 11))
+    for i in range(n_nodes):
+        # coverage bias: node 0's opcode walks the whole vocabulary
+        # across the pool, the rest draw uniformly
+        op = ALL_OPS[seed % len(ALL_OPS)] if i == 0 \
+            else ALL_OPS[int(rng.integers(len(ALL_OPS)))]
+        n_in, n_out = ARITY[op]
+        ins = [src(force_env=(i == 0 and k == 0)) for k in range(n_in)]
+        outs = [fresh("a") for _ in range(n_out)]
+        g.add(op, ins, outs)
+        open_arcs.extend(outs)
+    if not open_arcs:        # keep at least one drained output bus
+        g.add(Op.ADD, [fresh("x"), const_arc()], ["z_out"])
+    g.validate()
+    return g
+
+
+def random_feeds_for(g: Graph, rng, k: int) -> dict:
+    feeds = {}
+    for a in g.input_arcs():
+        if rng.random() < 0.5:
+            feeds[a] = rng.choice(EDGE_VALS, size=k).astype(np.int32)
+        else:
+            feeds[a] = rng.integers(-100, 100, (k,), dtype=np.int32)
+    return feeds
+
+
+def test_graph_generator_reaches_every_opcode_class():
+    seen = set()
+    for seed in range(24):
+        seen |= {n.op for n in random_graph(seed).nodes}
+    assert seen == set(Op)
+
+
+# ---------------------------------------------------------------------------
+# the differential matrix (shared by both generators)
+# ---------------------------------------------------------------------------
+def _check_full(got, want, tag):
+    assert got.cycles == want.cycles, (tag, got.cycles, want.cycles)
+    assert got.fired == want.fired, (tag, got.fired, want.fired)
+    assert got.counts == want.counts, (tag, got.counts, want.counts)
+    for a, c in want.counts.items():
+        if c:
+            assert int(np.asarray(got.outputs[a])) == \
+                int(np.asarray(want.outputs[a])), (tag, a)
+
+
+def _check_observables(got, want, tag):
+    for a, c in want.counts.items():
+        assert got.counts[a] == c, (tag, a)
+        if c:
+            assert int(np.asarray(got.outputs[a])) == \
+                int(np.asarray(want.outputs[a])), (tag, a)
+
+
+def differential_case(g: Graph, feeds_list, Ks, tag):
+    """One graph, many feed streams, the whole backend x optimize x K
+    matrix.  Engines compile once per (backend, K, level) and rerun
+    across the feed streams."""
+    g_full, _ = passes.optimize_graph(g)
+    oracles = [run_reference(g, f, max_cycles=CAP) for f in feeds_list]
+    oracles_full = [run_reference(g_full, f, max_cycles=CAP)
+                    for f in feeds_list]
+    # the reference backend is the oracle itself; pin the plumbing once
+    ref_eng = DataflowEngine(g, backend="reference", max_cycles=CAP)
+    _check_full(ref_eng.run(feeds_list[0]), oracles[0], (tag, "ref"))
+    for want, want_full in zip(oracles, oracles_full):
+        if want.cycles < CAP:    # authored fabric quiesced: rewrite
+            _check_observables(want_full, want, (tag, "rewrite"))
+    for backend in ("xla", "pallas"):
+        for K in Ks:
+            e_off = DataflowEngine(g, backend=backend, block_cycles=K,
+                                   max_cycles=CAP)
+            e_spec = DataflowEngine(g, backend=backend, block_cycles=K,
+                                    max_cycles=CAP, optimize=True)
+            e_full = DataflowEngine(g_full, backend=backend,
+                                    block_cycles=K, max_cycles=CAP,
+                                    optimize=True)
+            for i, f in enumerate(feeds_list):
+                t = (tag, backend, K, i)
+                _check_full(e_off.run(f), oracles[i], (*t, "off"))
+                _check_full(e_spec.run(f), oracles[i], (*t, "spec"))
+                _check_full(e_full.run(f), oracles_full[i], (*t, "full"))
+
+
+@pytest.mark.parametrize("seed", range(N_GRAPHS))
+def test_fuzz_random_graphs(seed):
+    g = random_graph(seed)
+    rng = np.random.default_rng(5000 + seed)
+    feeds_list = [random_feeds_for(g, rng, 3) for _ in range(N_FEEDS)]
+    differential_case(g, feeds_list, _ks(seed), f"graph{seed}")
+
+
+# ---------------------------------------------------------------------------
+# generator 2: random traceable expressions (numpy is the oracle)
+# ---------------------------------------------------------------------------
+LIT_VALS = [-5, -3, -1, 0, 1, 2, 3, 7, 31]
+_BIN = ["add", "sub", "mul", "and", "or", "xor", "max", "min"]
+_CMP = ["gt", "ge", "lt", "le", "eq", "ne"]
+
+
+def random_expr(seed: int, n_args: int):
+    """An expression tree over supported ops; the top level always
+    depends on arg 0 so the program is never a compile-time constant."""
+    rng = np.random.default_rng(2000 + seed)
+
+    def val(d):
+        r = rng.random()
+        if d <= 0 or r < 0.25:
+            return ("lit", int(rng.choice(LIT_VALS))) if r < 0.1 \
+                else ("arg", int(rng.integers(n_args)))
+        r = rng.random()
+        if r < 0.45:
+            return ("bin", _BIN[int(rng.integers(len(_BIN)))],
+                    val(d - 1), val(d - 1))
+        if r < 0.55:
+            return ("shift", "shl" if rng.random() < 0.5 else "shr",
+                    val(d - 1), int(rng.integers(0, 9)))
+        if r < 0.65:
+            return ("neg", val(d - 1))
+        if r < 0.72:
+            return ("abs", val(d - 1))
+        if r < 0.80:
+            lo = int(rng.integers(-20, 10))
+            return ("clamp", val(d - 1), lo, lo + int(rng.integers(1, 40)))
+        if r < 0.87:
+            return ("pow", val(d - 1), int(rng.integers(2, 4)))
+        return ("where",
+                (_CMP[int(rng.integers(len(_CMP)))], val(d - 1),
+                 val(d - 1)),
+                val(d - 1), val(d - 1))
+
+    return ("bin", "add", ("arg", 0), val(3))
+
+
+def eval_expr(t, args, m):
+    """Evaluate a tree with module `m` (jnp on traced scalars, np on
+    int32 arrays) — the same source of truth for both sides."""
+    kind = t[0]
+    if kind == "arg":
+        return args[t[1]]
+    if kind == "lit":
+        return m.int32(t[1]) if m is np else t[1]
+    if kind == "bin":
+        a, b = eval_expr(t[2], args, m), eval_expr(t[3], args, m)
+        return {"add": lambda: a + b, "sub": lambda: a - b,
+                "mul": lambda: a * b, "and": lambda: a & b,
+                "or": lambda: a | b, "xor": lambda: a ^ b,
+                "max": lambda: m.maximum(a, b),
+                "min": lambda: m.minimum(a, b)}[t[1]]()
+    if kind == "shift":
+        a = eval_expr(t[2], args, m)
+        return a << t[3] if t[1] == "shl" else a >> t[3]
+    if kind == "neg":
+        return -eval_expr(t[1], args, m)
+    if kind == "abs":
+        return abs(eval_expr(t[1], args, m))
+    if kind == "clamp":
+        return m.clip(eval_expr(t[1], args, m), t[2], t[3])
+    if kind == "pow":
+        return eval_expr(t[1], args, m) ** t[2]
+    if kind == "where":
+        cmp, av, bv = t[1]
+        a, b = eval_expr(av, args, m), eval_expr(bv, args, m)
+        c = {"gt": a > b, "ge": a >= b, "lt": a < b, "le": a <= b,
+             "eq": a == b, "ne": a != b}[cmp]
+        return m.where(c, eval_expr(t[2], args, m),
+                       eval_expr(t[3], args, m))
+    raise AssertionError(t)
+
+
+@pytest.mark.parametrize("seed", range(N_PROGS))
+def test_fuzz_random_expressions(seed):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(3000 + seed)
+    n_args = int(rng.integers(1, 4))
+    tree = random_expr(seed, n_args)
+    prog = trace(lambda *a: eval_expr(tree, a, jnp),
+                 *([np.int32] * n_args), name=f"expr{seed}")
+    k = 3
+    feeds_list, wants = [], []
+    for _ in range(N_FEEDS):
+        streams = [rng.integers(-50, 50, (k,), dtype=np.int32)
+                   for _ in range(n_args)]
+        feeds_list.append(prog.make_feeds(*streams))
+        wants.append(np.asarray(eval_expr(tree, streams, np), np.int32))
+    # numpy is an independent oracle for the synthesized fabric
+    for f, want in zip(feeds_list, wants):
+        r = run_reference(prog, f, max_cycles=CAP)
+        assert r.counts[prog.out_arc] == k, (seed, "count")
+        assert int(np.asarray(r.outputs[prog.out_arc])) == \
+            int(want[-1]), (seed, "numpy-differential")
+    # and the full executor matrix agrees bit-for-bit
+    differential_case(prog, feeds_list, _ks(seed), f"expr{seed}")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property layer (CI; local runs without hypothesis skip it)
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2 ** 20),
+           fseed=st.integers(min_value=0, max_value=2 ** 20))
+    def test_property_random_graph_spec_identity(seed, fseed):
+        """Any generated graph, any feeds: the specialized plan is a
+        pure layout change on the xla engine."""
+        g = random_graph(seed)
+        feeds = random_feeds_for(g, np.random.default_rng(fseed), 2)
+        want = run_reference(g, feeds, max_cycles=CAP)
+        eng = DataflowEngine(g, backend="xla", block_cycles=4,
+                             max_cycles=CAP, optimize=True)
+        _check_full(eng.run(feeds), want, (seed, fseed))
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2 ** 20),
+           fseed=st.integers(min_value=0, max_value=2 ** 20))
+    def test_property_random_expression_matches_numpy(seed, fseed):
+        import jax.numpy as jnp
+        rng = np.random.default_rng(seed)
+        n_args = int(rng.integers(1, 4))
+        tree = random_expr(seed, n_args)
+        prog = trace(lambda *a: eval_expr(tree, a, jnp),
+                     *([np.int32] * n_args))
+        streams = [np.random.default_rng(fseed + i)
+                   .integers(-50, 50, (2,), dtype=np.int32)
+                   for i in range(n_args)]
+        want = np.asarray(eval_expr(tree, streams, np), np.int32)
+        r = run_reference(prog, prog.make_feeds(*streams),
+                          max_cycles=CAP)
+        assert r.counts[prog.out_arc] == 2
+        assert int(np.asarray(r.outputs[prog.out_arc])) == int(want[-1])

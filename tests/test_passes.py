@@ -453,11 +453,16 @@ def test_alu_numpy_matches_jax_alu_on_edge_operands():
     the float-SHR underflow drift shipped because no test compared them
     on edge operands.  Pin bit-for-bit parity across every value op x
     dtype on the historical drift points: zero divisors, signed zeros,
-    shift over/underflow, extreme magnitudes."""
+    shift over/underflow, extreme magnitudes — plus the integer edges
+    (ISSUE 4): INT_MIN negation/abs wrap, DIV by -1 at INT_MIN,
+    shift-by->=-width (clipped, both directions), and unsigned
+    wraparound on a uint32 fabric."""
     import jax.numpy as jnp
     from repro.core.engine import _alu_op, alu_numpy
     cases = {
-        np.int32: [-(2 ** 31), -40, -1, 0, 1, 5, 31, 40, 2 ** 31 - 1],
+        np.int32: [-(2 ** 31), -(2 ** 31) + 1, -40, -2, -1, 0, 1, 5,
+                   31, 32, 33, 40, 2 ** 31 - 1],
+        np.uint32: [0, 1, 2, 5, 7, 31, 32, 40, 2 ** 31, 2 ** 32 - 1],
         np.float32: [-np.inf, -200.0, -1.5, -0.0, 0.0, 0.5, 1.0,
                      200.0, np.inf],
     }
@@ -466,6 +471,7 @@ def test_alu_numpy_matches_jax_alu_on_edge_operands():
         A, B = np.meshgrid(np.asarray(vals, dt), np.asarray(vals, dt))
         a, b = A.ravel(), B.ravel()
         is_f = np.issubdtype(dt, np.floating)
+        uview = np.dtype(f"u{np.dtype(dt).itemsize}")
         for op in ops:
             with np.errstate(all="ignore"):
                 want = np.asarray(alu_numpy(op, a, b, dt), dt)
@@ -473,9 +479,63 @@ def test_alu_numpy_matches_jax_alu_on_edge_operands():
                 _alu_op(op, jnp.asarray(a), jnp.asarray(b), dt)
             ).astype(dt, copy=False)
             nan = np.isnan(want) if is_f else np.zeros(want.shape, bool)
-            assert (got.view(np.uint32)[~nan]
-                    == want.view(np.uint32)[~nan]).all(), (op, dt)
+            assert (got.view(uview)[~nan]
+                    == want.view(uview)[~nan]).all(), (op, dt)
             assert np.isnan(got[nan]).all(), (op, dt)
+
+
+def test_alu_integer_edge_regressions_pin_exact_values():
+    """The specific integer edges, asserted against their expected
+    two's-complement results so a 'both drifted the same way' bug in
+    the parity test above cannot hide them: INT_MIN // -1 wraps to
+    INT_MIN (and never traps), shifts by >= width clip to 31, negative
+    shift counts clip to 0, and uint32 SUB wraps."""
+    import jax.numpy as jnp
+    from repro.core.engine import _alu_op, alu_numpy
+    INT_MIN = np.int32(-(2 ** 31))
+    checks = [
+        (Op.DIV, np.int32, INT_MIN, np.int32(-1), INT_MIN),
+        (Op.DIV, np.int32, INT_MIN, np.int32(0), np.int32(0)),
+        (Op.SUB, np.int32, np.int32(0), INT_MIN, INT_MIN),
+        (Op.SHL, np.int32, np.int32(1), np.int32(40), INT_MIN),
+        (Op.SHR, np.int32, INT_MIN, np.int32(40), np.int32(-1)),
+        (Op.SHL, np.int32, np.int32(1), np.int32(-5), np.int32(1)),
+        (Op.SUB, np.uint32, np.uint32(0), np.uint32(1),
+         np.uint32(2 ** 32 - 1)),
+        (Op.ADD, np.uint32, np.uint32(2 ** 32 - 1), np.uint32(2),
+         np.uint32(1)),
+        (Op.SHR, np.uint32, np.uint32(2 ** 32 - 1), np.uint32(31),
+         np.uint32(1)),
+    ]
+    for op, dt, a, b, want in checks:
+        with np.errstate(all="ignore"):
+            got_np = np.asarray(alu_numpy(op, a, b, dt), dt).reshape(())
+        got_jx = np.asarray(
+            _alu_op(op, jnp.asarray(a), jnp.asarray(b), dt)
+        ).astype(dt).reshape(())
+        assert got_np == want, (op, dt, "alu_numpy")
+        assert got_jx == want, (op, dt, "_alu_op")
+
+
+def test_uint32_fabric_runs_bit_identical_across_engines():
+    """Unsigned execution end to end, not just ALU formulas: a
+    wraparound-heavy uint32 fabric drains identical results from the
+    reference oracle and the xla engine (dense and specialized)."""
+    g = Graph(name="u32")
+    g.const("m1", 2 ** 32 - 1)               # UINT_MAX
+    g.add(Op.ADD, ["x", "m1"], ["t"])        # x - 1 mod 2^32
+    g.add(Op.SHR, ["t", "s"], ["z"])
+    feeds = {"x": np.asarray([0, 1, 2 ** 31], np.uint32),
+             "s": np.asarray([1, 31, 40], np.uint32)}
+    want = run_reference(g, feeds, dtype=np.uint32)
+    for opt in (False, True):
+        eng = DataflowEngine(g, dtype=np.uint32, backend="xla",
+                             block_cycles=4, optimize=opt)
+        got = eng.run(feeds)
+        assert got.counts == want.counts and got.cycles == want.cycles
+        np.testing.assert_array_equal(
+            np.asarray(got.outputs["z"], np.uint32),
+            np.asarray(want.outputs["z"], np.uint32))
 
 
 def test_optimize_graph_rejects_unknown_pass():
