@@ -95,7 +95,7 @@ def quick_opt() -> None:
     from benchmarks import table1_dataflow
     recs = table1_dataflow.opt_rows(
         Bs=(1, 2), Ks=(4,), reps=1, k_tokens=4, fib_iters=8,
-        benches=("fir", "fibonacci", "fir_traced"))
+        benches=("fir", "fibonacci", "fir_traced", "gcd"))
     table1_dataflow.print_opt_csv(recs)
 
 
@@ -116,12 +116,13 @@ def quick() -> None:
     BENCH_*.json files are full-run artifacts)."""
     from benchmarks import table1_dataflow
     for r in table1_dataflow.rows(benches=("fibonacci", "vector_sum",
-                                           "horner", "relu_chain")):
+                                           "horner", "relu_chain",
+                                           "gcd", "newton_sqrt")):
         print(f"table1_{r['name']},{r['compiled_us_per_token']},"
               f"nodes={r['nodes']};lat_cyc={r['latency_cycles']}")
     recs = table1_dataflow.backend_rows(
         Bs=(1, 2), block=4, reps=1, k_tokens=2,
-        benches=("fibonacci", "vector_sum", "relu_chain"))
+        benches=("fibonacci", "vector_sum", "relu_chain", "gcd"))
     table1_dataflow.print_backend_csv(recs)
 
 

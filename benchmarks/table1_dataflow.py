@@ -24,9 +24,8 @@ import time
 import numpy as np
 
 from repro.core import library
-from repro.core.compile import compile_dag_stream, compile_cyclic
+from repro.core.compile import compile
 from repro.core.engine import DataflowEngine
-from repro.core.graph import Op
 
 
 def _time(fn, *args, reps=5):
@@ -48,31 +47,29 @@ def rows(benches=None):
             continue
         bench = mk()
         g = bench.graph
+        dt = np.dtype(bench.dtype)
         r = g.resources()
-        eng = DataflowEngine(g)
-        if name == "fibonacci":
+        eng = DataflowEngine(g, dtype=dt)
+        if name in library.SINGLE_SHOT:
             feeds1 = feeds_k = library.random_feeds(name, bench, 20, rng)
             n_stream = 1
         else:
             feeds_k = library.random_feeds(name, bench, stream_k, rng)
             feeds1 = {a: np.asarray(v)[:1] for a, v in feeds_k.items()}
             n_stream = stream_k
-        # control ops need token-presence semantics (e.g. the traced
-        # relu_chain's select lowering; DMERGE consumes only its chosen
-        # input, so streams advance unevenly), so those DAGs stream
-        # through the trace-time-unrolled cyclic backend like fibonacci
-        if g.is_cyclic() or any(n.op in (Op.BRANCH, Op.NDMERGE,
-                                         Op.DMERGE) for n in g.nodes):
-            run = compile_cyclic(g)
-            fk = feeds_k
+        # the unified compile() probes GraphTraits and picks the
+        # executor: lockstep stream-vmapped SSA for control-free DAGs,
+        # the trace-time-unrolled token-presence executor for cyclic /
+        # control-bearing / init-bearing fabrics (loop benches)
+        run = compile(g, dtype=dt)
+        fk = feeds_k
+        if run.traits.tokens_out_static:
+            feeds_np = {k: np.asarray(v, dt) for k, v in feeds_k.items()}
+            compiled_call = lambda: run(feeds_np)
+            get_vals = lambda res: list(res.values())
+        else:
             compiled_call = lambda: run(fk)
             get_vals = lambda res: list(res.outputs.values())
-        else:
-            fn = compile_dag_stream(g)
-            feeds_np = {k: np.asarray(v, np.int32)
-                        for k, v in feeds_k.items()}
-            compiled_call = lambda: fn(feeds_np)
-            get_vals = lambda res: list(res.values())
 
         lat = eng.run(feeds1).cycles
         thr = eng.run(feeds_k).cycles if n_stream > 1 else lat
@@ -113,7 +110,8 @@ def backend_rows(Bs=(1, 8, 64), block=16, reps=3, k_tokens=8,
             continue
         bench = mk()
         g = bench.graph
-        k = 20 if name == "fibonacci" else k_tokens
+        dt = np.dtype(bench.dtype)
+        k = 20 if name in library.SINGLE_SHOT else k_tokens
         feeds = library.random_feeds(name, bench, k,
                                      np.random.default_rng(0))
         tok1 = library.tokens_out(name, k)
@@ -130,12 +128,15 @@ def backend_rows(Bs=(1, 8, 64), block=16, reps=3, k_tokens=8,
                 dispatches=rs[0].dispatches,
                 cycles=rs[0].cycles))
 
-        compiled = ops.make_fire_step(g)
-        base_call = lambda: ops.run_fabric(g, feeds, compiled=compiled)
-        record("pallas-percycle", 1, 1, base_call, base_call())
+        if dt == np.int32:      # the pallas kernels are int32-only
+            compiled = ops.make_fire_step(g)
+            base_call = lambda: ops.run_fabric(g, feeds, compiled=compiled)
+            record("pallas-percycle", 1, 1, base_call, base_call())
 
         for be, K in (("xla", 1), ("xla", block), ("pallas", block)):
-            eng = DataflowEngine(g, backend=be, block_cycles=K)
+            if be == "pallas" and dt != np.int32:
+                continue
+            eng = DataflowEngine(g, dtype=dt, backend=be, block_cycles=K)
             for B in Bs:
                 if B == 1:
                     call = lambda: eng.run(feeds)
@@ -169,22 +170,23 @@ def opt_rows(Bs=(1, 8), Ks=(4, 16), reps=7, k_tokens=64, fib_iters=300,
     the best of ``reps`` to shed scheduler noise.  cycles_per_s is the
     figure of merit: simulated fabric cycles per wall-clock second.
     """
-    from repro.core.compile import compile_graph
-
     out = []
     for name, mk in library.BENCHES.items():
         if benches is not None and name not in benches:
             continue
         bench = mk()
-        k = fib_iters if name == "fibonacci" else k_tokens
+        dt = np.dtype(bench.dtype)
+        k = fib_iters if name in library.SINGLE_SHOT else k_tokens
         feeds = library.random_feeds(name, bench, k,
                                      np.random.default_rng(0))
         tok1 = library.tokens_out(name, k)
         for be in backends:
+            if be == "pallas" and dt != np.int32:
+                continue        # the pallas kernels are int32-only
             for K in Ks:
                 for opt in levels:
-                    run = compile_graph(bench.graph, backend=be,
-                                        block_cycles=K, optimize=opt)
+                    run = compile(bench.graph, dtype=dt, backend=be,
+                                  block_cycles=K, optimize=opt)
                     eng = run.engine
                     for B in Bs:
                         if B == 1:

@@ -1,0 +1,60 @@
+"""Loop programs as cyclic dataflow fabrics (DESIGN.md §10).
+
+A ``lax.while_loop`` with a data-dependent trip count becomes the
+paper's cyclic loop schema — NDMERGE entry per carry, predicate cone,
+BRANCH-steered back edges — compiled through the single ``compile()``
+entry point, bit-identical on every executor, and served by the
+continuous-batching DataflowServer one initiation per request.
+
+Run: PYTHONPATH=src python examples/frontend_loop.py
+"""
+import math
+
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import asm
+from repro.core.compile import GraphTraits, compile
+from repro.front import trace
+from repro.serve.dataflow_server import DataflowServer
+
+
+# -- 1. an iterative algorithm, written as everyday jax ----------------------
+def gcd(a, b):
+    """Subtractive Euclid: the trip count depends on the data."""
+    def body(c):
+        x, y = c
+        return (jnp.where(x > y, x - y, x),
+                jnp.where(x > y, y, y - x))
+    return lax.while_loop(lambda c: c[0] != c[1], body, (a, b))[0]
+
+
+prog = trace(gcd, np.int32, np.int32, name="gcd")
+print(prog.summary())                    # a CYCLIC fabric
+print(GraphTraits.probe(prog))           # what the executor must provide
+print(asm.emit(prog)[:400], "...\n")     # Listing-1 assembler round-trips
+
+# -- 2. one compile() entry point, every executor ----------------------------
+for backend in ("reference", "xla", "pallas", "unrolled"):
+    run = compile(prog, backend=backend, block_cycles=8)
+    res = run(prog.make_feeds([360], [84]))
+    got = np.asarray(res.outputs[prog.out_arc]).item()
+    print(f"{backend:9s} gcd(360, 84) = {got}  "
+          f"(cycles={res.cycles}, fired={res.fired})")
+    assert got == math.gcd(360, 84) == 12, (backend, got)
+
+# -- 3. serve it: one loop initiation per request ----------------------------
+srv = DataflowServer.for_fn(gcd, np.int32, np.int32, name="gcd",
+                            slots=4, block_cycles=8, backend="xla")
+cases = [(12, 18), (100, 64), (7, 7), (81, 27), (360, 84), (1, 99)]
+uids = [srv.submit_args(a, b) for a, b in cases]
+results = {r.uid: r for r in srv.drain()}
+for uid, (a, b) in zip(uids, cases):
+    r = results[uid]
+    print(f"gcd({a:3d},{b:3d}) = "
+          f"{np.asarray(r.engine.outputs[prog.out_arc]).item():3d}  "
+          f"slot={r.metrics.slot} residency={r.metrics.residency_cycles}cyc "
+          f"tokens={r.metrics.tokens_out} truncated={r.metrics.truncated}")
+    assert np.asarray(r.engine.outputs[prog.out_arc]).item() == math.gcd(a, b)
+print("served", len(cases), "loop initiations, all exact")

@@ -17,6 +17,13 @@ literal base) or floats — float fabrics from the tracing frontend
 (:mod:`repro.front`) carry non-integral coefficients, and ``emit`` must
 round-trip them exactly for the serving layer's signature cache.
 
+``init <arc> = <number>;`` declares an *initial-token annotation*
+(DESIGN.md §10): the arc starts full with the given one-shot value —
+the synchronous-dataflow delay marking on a loop back-edge register.
+Cyclic fabrics synthesized by the loop-lowering frontend carry these,
+so they must survive serialize/deserialize like everything else (the
+serving signature cache hashes the emission).
+
 Errors: malformed statements, unknown opcodes, wrong argument counts,
 bad/duplicate const declarations raise :class:`SyntaxError` naming the
 offending statement; structural violations (an arc with two producers
@@ -83,17 +90,22 @@ def parse(text: str, name: str = "asm") -> Graph:
         if not m:
             raise SyntaxError(f"bad statement: {stmt!r}")
         opname, rest = m.group(1).lower(), m.group(2)
-        if opname == "const":
+        if opname in ("const", "init"):
             arc, eq, val = rest.partition("=")
             arc, val = arc.strip(), val.strip()
             if not eq or not arc or not val:
                 raise SyntaxError(
-                    f"bad const declaration {stmt!r} "
-                    "(want 'const <arc> = <number>;')")
-            if arc in g.consts:
-                raise SyntaxError(f"const arc {arc!r} redeclared "
+                    f"bad {opname} declaration {stmt!r} "
+                    f"(want '{opname} <arc> = <number>;')")
+            decls = g.consts if opname == "const" else g.inits
+            if arc in decls:
+                raise SyntaxError(f"{opname} arc {arc!r} redeclared "
                                   f"in {stmt!r}")
-            g.const(arc, _parse_const(val, stmt))
+            if arc in g.consts or arc in g.inits:
+                raise SyntaxError(
+                    f"arc {arc!r} declared both const and init "
+                    f"in {stmt!r}")
+            decls[arc] = _parse_const(val, stmt)
             continue
         if opname in _ALIASES:
             op = _ALIASES[opname]
@@ -117,6 +129,8 @@ def emit(g: Graph) -> str:
     out = []
     for arc, val in g.consts.items():
         out.append(f"const {arc} = {_emit_const(val)};")
+    for arc, val in g.inits.items():
+        out.append(f"init {arc} = {_emit_const(val)};")
     for i, n in enumerate(g.nodes, start=1):
         args = ", ".join((*n.inputs, *n.outputs))
         out.append(f"{i}. {n.op.name.lower()} {args};")

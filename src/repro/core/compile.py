@@ -1,31 +1,35 @@
-"""Compile a static dataflow graph to native JAX/XLA.
+"""One compile pipeline for static dataflow graphs (DESIGN.md §10).
 
-Two backends, selected by graph shape:
+:func:`compile` is the single entry point.  It probes the graph's
+capabilities (:class:`GraphTraits`: cyclic? control operators?
+initial-token annotations?) and selects an executor — replacing the
+scattered per-function op-set checks the stack grew across PRs 1–4:
 
-* ``compile_dag``    — acyclic graphs. Nodes are scheduled in topological
-  order into a pure SSA function; every node fires exactly once per stream
-  element, so a *pipelined stream* through the fabric becomes ``vmap`` over
-  the stream (the TPU analogue of the paper's spatial pipelining: instead
-  of k tokens in flight across pipeline stages, k stream elements ride the
-  vector lanes).  XLA then fuses the whole fabric into a handful of
-  kernels.
+* ``"dag"``      — lockstep SSA: nodes scheduled in topological order
+  into a pure function, ``vmap`` over the token stream (the TPU
+  analogue of the paper's spatial pipelining).  Legal only when
+  ``traits.tokens_out_static`` — acyclic, control-free, init-free — so
+  every stream element fires every node exactly once.
+* ``"unrolled"`` — token-presence SSA: the engine cycle unrolled over
+  arcs at trace time; arc registers become loop-carried SSA values and
+  every fire/consume/produce a masked ``jnp.where``.  Handles cycles,
+  BRANCH/NDMERGE/DMERGE, and initial tokens, bit-identical to
+  :class:`repro.core.engine.DataflowEngine` (property-tested).
+* ``"xla" | "pallas" | "reference"`` — the cycle-accurate block-fused
+  engines (resumable slots, batching, serving).
+* ``"auto"``     — ``"dag"`` when the traits allow it, else
+  ``"unrolled"`` (the historical ``compile_graph`` dispatch).
 
-* ``compile_cyclic`` — graphs with feedback arcs (the paper's loop schema:
-  ndmerge/dmerge + decider + branch, e.g. Fibonacci).  The engine cycle is
-  *unrolled over arcs at trace time*: arc registers become loop-carried
-  SSA values and every node's fire/consume/produce becomes a masked
-  ``jnp.where`` — no gather/scatter, no dynamic indexing.  Semantics are
-  bit-identical to :class:`repro.core.engine.DataflowEngine` (property-
-  tested), but XLA sees straight-line scalar code per cycle and fuses it.
-
-``compile_graph`` dispatches on cyclicity.  ``compile_fn`` goes one
-step earlier: it traces an ordinary scalar jax program through the
-:mod:`repro.front` frontend and compiles the synthesized fabric, so
-arbitrary expressions — not just the hand-assembled library benches —
-reach every executor through one entry point.
+``compile_fn`` goes one step earlier: it traces an ordinary scalar jax
+program (loops included — the frontend lowers ``lax.while_loop`` /
+``fori_loop`` / carry-only ``scan`` onto the paper's cyclic loop
+schema) through :mod:`repro.front` and hands the synthesized fabric to
+the same probe.  ``compile_graph`` / ``compile_cyclic`` remain as thin
+deprecated wrappers over :func:`compile` and the unrolled executor.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Mapping
 
@@ -34,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import Graph, Op
-from repro.core.engine import EngineResult, _alu, pack_feeds
+from repro.core.engine import BACKENDS, EngineResult, _alu, pack_feeds
 
 
 def _scalar_alu(op: Op, a, b, dtype):
@@ -46,21 +50,77 @@ def _truthy1(v):
 
 
 # ---------------------------------------------------------------------------
-# DAG backend
+# Capability probe
+# ---------------------------------------------------------------------------
+_CONTROL_OPS = (Op.BRANCH, Op.NDMERGE, Op.DMERGE)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphTraits:
+    """What a fabric demands of its executor (the :func:`compile` probe).
+
+    cyclic       — the graph has feedback arcs (the paper's loop schema).
+    control_ops  — names of token-routing operators present.  DMERGE
+      counts: it consumes only its CHOSEN input token, so under
+      data-dependent control the input streams advance unevenly — only
+      token-presence execution reproduces that.
+    has_inits    — initial-token annotations (one-shot pre-loaded arc
+      registers, the loop back-edge delays of DESIGN.md §10).
+
+    ``tokens_out_static`` is the lockstep property the "dag" executor
+    needs: every stream element fires every node exactly once, so each
+    output arc drains exactly one token per input element and the token
+    counts are static in the stream length.
+    """
+    cyclic: bool
+    control_ops: tuple[str, ...]
+    has_inits: bool
+
+    @classmethod
+    def probe(cls, graph: Graph) -> "GraphTraits":
+        return cls(
+            cyclic=graph.is_cyclic(),
+            control_ops=tuple(sorted({n.op.name for n in graph.nodes
+                                      if n.op in _CONTROL_OPS})),
+            has_inits=bool(graph.inits))
+
+    @property
+    def tokens_out_static(self) -> bool:
+        return not (self.cyclic or self.control_ops or self.has_inits)
+
+    def blockers(self) -> str:
+        """The trait names that rule out lockstep execution."""
+        why = []
+        if self.cyclic:
+            why.append("cyclic=True")
+        if self.control_ops:
+            why.append(f"control_ops={list(self.control_ops)}")
+        if self.has_inits:
+            why.append("has_inits=True")
+        return ", ".join(why) or "none"
+
+
+# ---------------------------------------------------------------------------
+# DAG (lockstep SSA) executor
 # ---------------------------------------------------------------------------
 def compile_dag(graph: Graph, dtype=jnp.int32):
     """Return ``fn(inputs: dict) -> dict`` evaluating the fabric once.
 
     Supports primitive/decider/copy/dmerge/sink nodes.  ``branch`` and
-    ``ndmerge`` need token-presence semantics — use the cyclic backend.
+    ``ndmerge`` (and initial-token annotations) need token-presence
+    semantics — use the unrolled executor or an engine backend.
     Note ``dmerge`` here is a pure per-element select (both inputs
     advance together); that matches the engine only when every stream
-    element fires every node once, which is why ``compile_graph``'s
-    auto dispatch sends DMERGE-bearing graphs to the cyclic backend.
+    element fires every node once, which is why :func:`compile`'s
+    auto dispatch sends DMERGE-bearing graphs to the unrolled executor.
     """
     order = graph.try_topo_order()
     if order is None:
         raise ValueError(f"{graph.name}: cyclic — use compile_cyclic")
+    if graph.inits:
+        raise ValueError(
+            f"{graph.name}: initial-token annotations (has_inits) need "
+            "token-presence semantics — use the unrolled executor")
     for n in graph.nodes:
         if n.op in (Op.BRANCH, Op.NDMERGE):
             raise ValueError(
@@ -99,11 +159,15 @@ def compile_dag_stream(graph: Graph, dtype=jnp.int32):
 
 
 # ---------------------------------------------------------------------------
-# Cyclic backend
+# Unrolled (token-presence SSA) executor
 # ---------------------------------------------------------------------------
 def compile_cyclic(graph: Graph, token_shape=(), dtype=jnp.int32,
                    max_cycles: int = 100_000):
-    """Return ``fn(feeds: dict[str, [k,*ts] stream]) -> EngineResult``."""
+    """Return ``fn(feeds: dict[str, [k,*ts] stream]) -> EngineResult``.
+
+    This is the "unrolled" executor of :func:`compile` (kept under its
+    historical name as a deprecated public entry point — new code
+    should call ``compile(graph, backend="unrolled")``)."""
     graph.validate()
     ts = tuple(token_shape)
     dtype = jnp.dtype(dtype)
@@ -111,6 +175,7 @@ def compile_cyclic(graph: Graph, token_shape=(), dtype=jnp.int32,
     input_arcs = graph.input_arcs()
     output_arcs = graph.output_arcs()
     consts = dict(graph.consts)
+    inits = dict(graph.inits)
     nodes = list(graph.nodes)
 
     def run(feeds: Mapping[str, object], max_cycles: int = max_cycles):
@@ -125,9 +190,11 @@ def compile_cyclic(graph: Graph, token_shape=(), dtype=jnp.int32,
     @functools.partial(jax.jit, static_argnums=(2,))
     def _compiled(feed_vals, feed_len, max_cycles):
         zero = jnp.zeros(ts, dtype)
-        full0 = {a: jnp.bool_(a in consts) for a in arcs}
+        full0 = {a: jnp.bool_(a in consts or a in inits) for a in arcs}
         val0 = {a: (jnp.asarray(np.broadcast_to(consts[a], ts), dtype)
-                    if a in consts else zero) for a in arcs}
+                    if a in consts else
+                    jnp.asarray(np.broadcast_to(inits[a], ts), dtype)
+                    if a in inits else zero) for a in arcs}
         state0 = dict(
             full=full0, val=val0,
             ptr=jnp.zeros((max(n_in_ := len(input_arcs), 1),), jnp.int32),
@@ -239,89 +306,124 @@ def compile_cyclic(graph: Graph, token_shape=(), dtype=jnp.int32,
 
 OPTIMIZE_LEVELS = (False, "spec", "full", True)
 BACKENDS_NOTE = "xla | pallas | reference"
+EXECUTORS = ("auto", "dag", "unrolled", *BACKENDS)
 
 
-def compile_graph(graph: Graph, token_shape=(), dtype=jnp.int32,
-                  max_cycles: int = 100_000, backend: str = "auto",
-                  block_cycles: int = 16, optimize=False):
-    """Dispatch a fabric to an executor.
+def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
+            max_cycles: int = 100_000, backend: str = "auto",
+            block_cycles: int = 16, optimize=False):
+    """THE compile pipeline: probe traits, pick a legal executor +
+    optimize level, return ``run(feeds) -> EngineResult`` (or the
+    vmapped stream fn for the "dag" executor).
 
-    backend="auto" keeps the historical shape-directed choice: DAG ->
-    stream-vmapped SSA (``compile_dag_stream``); cyclic -> trace-time
-    unrolled engine (``compile_cyclic``).  Any
-    :data:`repro.core.engine.BACKENDS` name instead returns a
-    cycle-accurate block-fused engine callable ``run(feeds) ->
-    EngineResult`` (plus a ``.engine`` attribute exposing
-    ``run_batch``), so benches and tests drive every executor through
-    one entry point.
+    backend:
+      * ``"auto"``     — ``"dag"`` when ``GraphTraits.tokens_out_static``
+        holds, else ``"unrolled"`` (the historical shape-directed
+        dispatch, now trait-driven);
+      * ``"dag"``      — lockstep stream-vmapped SSA
+        (``compile_dag_stream``).  Raises, naming the blocking traits,
+        for any graph that needs token-presence semantics — asking for
+        lockstep on such a fabric would silently compute wrong token
+        counts, not a slower right answer;
+      * ``"unrolled"`` — trace-time unrolled token-presence SSA
+        (``compile_cyclic``): cycles, control ops, initial tokens;
+      * any :data:`repro.core.engine.BACKENDS` name — a cycle-accurate
+        block-fused engine callable (plus ``.engine`` exposing the
+        resumable slot API and ``run_batch``).
 
     optimize selects the compiler pipeline (DESIGN.md §8):
       * ``False``  — run the graph exactly as authored;
       * ``"spec"`` — opcode-class-specialized plan only: a pure layout
         permutation, every EngineResult field bit-identical to the
-        unoptimized engine;
-      * ``True`` / ``"full"`` — graph rewrite passes (constant folding,
-        identity elimination, dead-node/arc elimination;
-        :func:`repro.core.passes.optimize_graph`) *then* the
-        specialized plan.  Rewrites shrink the fabric, so for fabrics
-        that quiesce the surviving output arcs drain bit-identical
-        values and token counts while ``cycles``/``fired`` may shrink.
-        With ``backend="auto"`` only the rewrite half applies — the
-        auto executors are trace-time unrolled SSA with no plan to
-        specialize; pick an engine backend to get both halves.
-    The returned callable exposes the rewritten graph as ``.graph``
-    and the rewrite report as ``.report`` (None when no rewrites ran).
+        unoptimized engine.  Engine backends only (the SSA executors
+        have no plan to specialize);
+      * ``True`` / ``"full"`` — graph rewrite passes (region-scoped
+        constant folding, identity elimination, DCE;
+        :func:`repro.core.passes.optimize_graph` — loop regions and
+        their timing are left untouched) *then* the specialized plan
+        where a plan exists.  For fabrics that quiesce the surviving
+        output arcs drain bit-identical values and token counts while
+        ``cycles``/``fired`` may shrink.
+
+    The returned callable exposes the (possibly rewritten) graph as
+    ``.graph``, the rewrite report as ``.report`` (None when no
+    rewrites ran), and the capability probe as ``.traits``.
     """
     if block_cycles < 1:
         raise ValueError(
             f"block_cycles must be >= 1, got {block_cycles}")
     if optimize not in OPTIMIZE_LEVELS:
         raise ValueError(f"optimize {optimize!r} not in {OPTIMIZE_LEVELS}")
-    if optimize == "spec" and backend == "auto":
-        # specialization is plan-level; the auto backends (trace-time
-        # unrolled SSA) have no plan, so "spec" would silently measure
-        # an unoptimized runner
+    if backend not in EXECUTORS:
+        raise ValueError(f"backend {backend!r} not in {EXECUTORS}")
+    if optimize == "spec" and backend in ("auto", "dag", "unrolled"):
+        # specialization is plan-level; the SSA executors have no plan,
+        # so "spec" would silently measure an unoptimized runner
         raise ValueError(
             'optimize="spec" needs an engine backend '
-            f'({BACKENDS_NOTE}); backend="auto" only supports the '
+            f'({BACKENDS_NOTE}); backend={backend!r} only supports the '
             'rewrite pipeline (optimize="full"/True)')
     report = None
     if optimize in (True, "full"):
         from repro.core import passes
         graph, report = passes.optimize_graph(graph, dtype=np.dtype(
             str(jnp.dtype(dtype))))
-    if backend != "auto":
+    traits = GraphTraits.probe(graph)
+    if backend == "auto":
+        backend = "dag" if traits.tokens_out_static else "unrolled"
+    if backend == "dag" and not traits.tokens_out_static:
+        raise ValueError(
+            f"{graph.name}: backend='dag' runs lockstep SSA semantics "
+            f"(one firing per node per stream element), but the "
+            f"GraphTraits probe found {traits.blockers()} — these need "
+            f"token-presence execution: backend='unrolled' or an "
+            f"engine backend ({BACKENDS_NOTE})")
+    if backend in BACKENDS:
         from repro.core.engine import DataflowEngine
         eng = DataflowEngine(graph, token_shape, dtype, max_cycles,
                              backend=backend, block_cycles=block_cycles,
                              optimize=optimize is not False)
         run = lambda feeds, max_cycles=None: eng.run(feeds, max_cycles)
         run.engine = eng
-        run.graph = graph
-        run.report = report
-        return run
-    # DMERGE joins BRANCH/NDMERGE here: compile_dag's DMERGE is a pure
-    # per-element select (both input streams advance in lockstep), but
-    # the engine's DMERGE consumes only the CHOSEN input token, so the
-    # streams advance unevenly under data-dependent control — only the
-    # token-presence (cyclic) backend reproduces that
-    if graph.is_cyclic() or any(
-            n.op in (Op.BRANCH, Op.NDMERGE, Op.DMERGE)
-            for n in graph.nodes):
+    elif backend == "unrolled":
+        # DMERGE joins BRANCH/NDMERGE in needing this executor:
+        # compile_dag's DMERGE is a pure per-element select (both input
+        # streams advance in lockstep), but the engine's DMERGE
+        # consumes only the CHOSEN input token, so the streams advance
+        # unevenly under data-dependent control — only token-presence
+        # execution reproduces that
         run = compile_cyclic(graph, token_shape, dtype, max_cycles)
     else:
         fn = compile_dag_stream(graph, dtype)
         run = lambda feeds: fn(feeds)   # jit fns reject new attributes
     run.graph = graph
     run.report = report
+    run.traits = traits
     return run
+
+
+def compile_graph(graph: Graph, token_shape=(), dtype=jnp.int32,
+                  max_cycles: int = 100_000, backend: str = "auto",
+                  block_cycles: int = 16, optimize=False):
+    """Deprecated name for :func:`compile` (kept as a thin wrapper —
+    the historical PR 1–4 entry point).  New code should call
+    ``compile`` directly."""
+    return compile(graph, token_shape, dtype, max_cycles, backend,
+                   block_cycles, optimize)
 
 
 def compile_fn(fn, *avals, backend: str = "xla", block_cycles: int = 16,
                optimize=False, max_cycles: int = 100_000,
                name: str | None = None, const_args: dict | None = None):
     """Trace a scalar jax program (:func:`repro.front.trace`) and hand
-    the synthesized fabric to :func:`compile_graph` in one step.
+    the synthesized fabric to :func:`compile` in one step.
+
+    The fabric is routed through the :class:`GraphTraits` probe like
+    any other graph, so a traced program that needs token-presence
+    semantics (loops, ``jnp.where`` control, initial tokens) either
+    gets an executor that provides them (the default ``backend="xla"``
+    engine and ``"auto"`` both do) or a precise error naming the
+    blocking trait — never a silently-lockstep compilation.
 
     Returns the executor callable with the frontend bookkeeping
     attached: ``run.make_feeds(*streams)`` is the positional feed
@@ -338,10 +440,10 @@ def compile_fn(fn, *avals, backend: str = "xla", block_cycles: int = 16,
     """
     from repro.front import trace
     prog = trace(fn, *avals, name=name, const_args=const_args)
-    run = compile_graph(prog, token_shape=(),
-                        dtype=jnp.dtype(str(prog.dtype)),
-                        max_cycles=max_cycles, backend=backend,
-                        block_cycles=block_cycles, optimize=optimize)
+    run = compile(prog, token_shape=(),
+                  dtype=jnp.dtype(str(prog.dtype)),
+                  max_cycles=max_cycles, backend=backend,
+                  block_cycles=block_cycles, optimize=optimize)
     run.traced = prog
     run.make_feeds = prog.make_feeds
     run.out_arcs = list(prog.out_arcs)

@@ -496,6 +496,9 @@ class DataflowEngine:
         for a, v in self.graph.consts.items():
             full[p["aidx"][a]] = 1
             val[p["aidx"][a]] = int(v)
+        for a, v in self.graph.inits.items():    # one-shot initial tokens
+            full[p["aidx"][a]] = 1
+            val[p["aidx"][a]] = int(v)
         return full, val
 
     def init_state(self, slots: int) -> SlotState:
@@ -749,6 +752,11 @@ class DataflowEngine:
         full0 = jnp.where(const_mask, True, full0)
         val0 = jnp.zeros((A + 2, *ts), dtype)
         for a, v in self.graph.consts.items():
+            val0 = val0.at[p["aidx"][a]].set(jnp.asarray(v, dtype))
+        # initial-token annotations: the arc starts full, one shot (not
+        # re-asserted by const_mask, so a consumer drains it for good)
+        for a, v in self.graph.inits.items():
+            full0 = full0.at[p["aidx"][a]].set(True)
             val0 = val0.at[p["aidx"][a]].set(jnp.asarray(v, dtype))
 
         n_out = max(len(p["output_arcs"]), 1)
@@ -1071,6 +1079,9 @@ def _run_reference(graph, feeds, token_shape, dtype, max_cycles,
     full = {a: False for a in p["arcs"]}
     val = {a: np.zeros(token_shape, dtype) for a in p["arcs"]}
     for a, v in graph.consts.items():
+        full[a] = True
+        val[a] = np.full(token_shape, v, dtype)
+    for a, v in graph.inits.items():    # one-shot initial tokens
         full[a] = True
         val[a] = np.full(token_shape, v, dtype)
     ptr = {a: 0 for a in p["input_arcs"]}

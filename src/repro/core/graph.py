@@ -104,7 +104,7 @@ class Node:
 class Graph:
     """A static dataflow graph.
 
-    Arc classes (derived, except consts):
+    Arc classes (derived, except consts and inits):
       * input arcs  — no producer node; fed by the environment. The paper's
         `dado*` labels. Each is fed a *stream* of tokens (strobed one at a
         time as the arc drains), or is a sticky ``const`` (the bus always
@@ -113,11 +113,20 @@ class Graph:
         cycle (the paper's result buses, e.g. `fibo`, `pf`).
       * internal arcs — exactly one producer and one consumer (the paper:
         "each channel is allowed only one sender and one receiver").
+
+    ``inits`` are *initial-token annotations* (DESIGN.md §10): an init
+    arc starts full, holding the given value — the classical
+    synchronous-dataflow "delay" marking on a loop's back-edge register.
+    Unlike a const bus the token is ONE-SHOT: once consumed, the arc
+    refills only from its producer (if any).  A producer-less init arc
+    (a compile-time loop initial value) is never refilled at all, and is
+    *not* an environment input — the feed strobe skips it.
     """
 
     nodes: list[Node] = dataclasses.field(default_factory=list)
     consts: dict[str, object] = dataclasses.field(default_factory=dict)
     name: str = "graph"
+    inits: dict[str, object] = dataclasses.field(default_factory=dict)
 
     # -- construction -------------------------------------------------
     def add(self, op: Op, inputs: Sequence[str], outputs: Sequence[str],
@@ -130,6 +139,11 @@ class Graph:
         self.consts[arc] = value
         return arc
 
+    def init(self, arc: str, value) -> str:
+        """Annotate ``arc`` with an initial token (see class docstring)."""
+        self.inits[arc] = value
+        return arc
+
     # -- derived structure --------------------------------------------
     @property
     def arcs(self) -> list[str]:
@@ -138,6 +152,8 @@ class Graph:
             for a in (*n.inputs, *n.outputs):
                 seen.setdefault(a, None)
         for a in self.consts:
+            seen.setdefault(a, None)
+        for a in self.inits:
             seen.setdefault(a, None)
         return list(seen)
 
@@ -158,7 +174,8 @@ class Graph:
     def input_arcs(self) -> list[str]:
         prod = self.producers()
         return [a for a in self.arcs
-                if a not in prod and a not in self.consts]
+                if a not in prod and a not in self.consts
+                and a not in self.inits]
 
     def output_arcs(self) -> list[str]:
         cons = self.consumers()
@@ -178,6 +195,13 @@ class Graph:
                                  f"{cons[a]} (one receiver per channel)")
             if a in self.consts and a in prod:
                 raise ValueError(f"const arc {a!r} also has a producer")
+        for a in self.inits:
+            if a in self.consts:
+                raise ValueError(f"init arc {a!r} is also a const bus "
+                                 "(a sticky bus needs no initial token)")
+            if not cons.get(a):
+                raise ValueError(f"init arc {a!r} has no consumer — the "
+                                 "initial token could never be used")
 
     def is_cyclic(self) -> bool:
         order = self.try_topo_order()

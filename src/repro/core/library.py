@@ -43,6 +43,8 @@ class Bench:
     out_arc: str
     streaming: bool = True  # DAG fabrics accept token streams
     out_arcs: list | None = None  # multi-output fabrics (bubble sort)
+    dtype: object = np.int32  # execution dtype (newton_sqrt is float32;
+    #                           pallas + the slot API are int32-only)
 
 
 def _fanout(g: Graph, src: str, k: int, prefix: str) -> list[str]:
@@ -461,6 +463,132 @@ def relu_chain_graph() -> Bench:
     return Bench(prog, make_feeds, reference, prog.out_arc)
 
 
+# ---------------------------------------------------------------------------
+# Iterative loop fabrics (traced cyclic programs, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+# The frontend lowers lax control flow onto the paper's loop schema —
+# NDMERGE entry per carry, predicate cone, BRANCH-steered back edges —
+# so these benches are CYCLIC fabrics with data-dependent (gcd, fib) or
+# static (newton_sqrt, horner_loop) trip counts.  Loop fabrics initiate
+# once per run: make_feeds takes scalar arguments, one result token out.
+
+def gcd_graph() -> Bench:
+    """Subtractive Euclid: while a != b, replace the larger by the
+    difference — a ``lax.while_loop`` with a data-dependent trip count,
+    the acceptance workload of the loop frontend."""
+    import jax.numpy as jnp
+    from jax import lax
+    from repro.front import trace
+
+    def gcd(a, b):
+        def body(c):
+            x, y = c
+            return (jnp.where(x > y, x - y, x),
+                    jnp.where(x > y, y, y - x))
+        return lax.while_loop(lambda c: c[0] != c[1], body, (a, b))[0]
+
+    prog = trace(gcd, np.int32, np.int32, name="gcd")
+
+    def make_feeds(a, b):
+        return prog.make_feeds([int(a)], [int(b)])
+
+    def reference(a, b):
+        import math
+        return np.asarray(math.gcd(int(a), int(b)), np.int32)
+
+    return Bench(prog, make_feeds, reference, prog.out_arc,
+                 streaming=False)
+
+
+def fib_loop_graph() -> Bench:
+    """fibonacci_graph regenerated from traced Python: ``fori_loop``
+    with a *traced* bound lowers to a while loop whose bound rides a
+    synthetic pass-through carry (it is loop-invariant but streamy)."""
+    import jax.numpy as jnp
+    from jax import lax
+    from repro.front import trace
+
+    def fib(n):
+        r = lax.fori_loop(0, n, lambda i, c: (c[1], c[0] + c[1]),
+                          (jnp.int32(0), jnp.int32(1)))
+        return r[0]
+
+    prog = trace(fib, np.int32, name="fib")
+
+    def make_feeds(n):
+        return prog.make_feeds([int(n)])
+
+    def reference(n):
+        a, b = np.int32(0), np.int32(1)
+        with np.errstate(over="ignore"):
+            for _ in range(int(n)):
+                a, b = b, np.int32(a + b)   # int32 wrap, like the fabric
+        return np.asarray(a, np.int32)
+
+    return Bench(prog, make_feeds, reference, prog.out_arc,
+                 streaming=False)
+
+
+def newton_sqrt_graph(iters: int = 8) -> Bench:
+    """Float Newton iteration ``x <- (x + n/x) / 2`` over a static
+    ``fori_loop`` (a carry-only scan): a float32 cyclic fabric whose
+    loop-invariant ``n`` rides a synthetic carry and whose body uses
+    the float DIV the DAG benches never exercise."""
+    from jax import lax
+    from repro.front import trace
+
+    def newton_sqrt(n):
+        return lax.fori_loop(0, iters, lambda i, x: 0.5 * (x + n / x),
+                             n * 0.5 + 0.5)
+
+    prog = trace(newton_sqrt, np.float32, name=f"newton_sqrt_{iters}")
+
+    def make_feeds(n):
+        return prog.make_feeds([float(n)])
+
+    def reference(n):
+        n = np.float32(n)
+        x = np.float32(n * np.float32(0.5) + np.float32(0.5))
+        with np.errstate(all="ignore"):
+            for _ in range(iters):
+                x = np.float32(0.5) * (x + n / x)
+        return np.asarray(x, np.float32)
+
+    return Bench(prog, make_feeds, reference, prog.out_arc,
+                 streaming=False, dtype=np.float32)
+
+
+def horner_loop_graph(degree: int = 8) -> Bench:
+    """horner's rule as an actual LOOP (the spatially-unrolled `horner`
+    bench re-rolled): ``acc <- acc*x + 1`` for ``degree`` iterations of
+    a static ``fori_loop`` — a carry-only scan whose carries are
+    (acc, x), the x carry a pure pass-through."""
+    import jax.numpy as jnp
+    from jax import lax
+    from repro.front import trace
+
+    def horner_loop(x):
+        r = lax.fori_loop(
+            0, degree, lambda i, c: (c[0] * c[1] + 1, c[1]),
+            (jnp.int32(1), x))
+        return r[0]
+
+    prog = trace(horner_loop, np.int32, name=f"horner_loop_{degree}")
+
+    def make_feeds(x):
+        return prog.make_feeds([int(x)])
+
+    def reference(x):
+        acc, x = np.int32(1), np.int32(x)
+        with np.errstate(over="ignore"):
+            for _ in range(degree):
+                acc = np.int32(acc * x + 1)  # int32 wrap, like the fabric
+        return np.asarray(acc, np.int32)
+
+    return Bench(prog, make_feeds, reference, prog.out_arc,
+                 streaming=False)
+
+
 BENCHES: dict[str, Callable[[], Bench]] = {
     "fibonacci": fibonacci_graph,
     "vector_sum": vector_sum_graph,
@@ -476,18 +604,36 @@ BENCHES: dict[str, Callable[[], Bench]] = {
     "horner": horner_graph,
     "saxpy": saxpy_graph,
     "relu_chain": relu_chain_graph,
+    # traced CYCLIC programs (loop frontend, DESIGN.md §10)
+    "gcd": gcd_graph,
+    "fib": fib_loop_graph,
+    "newton_sqrt": newton_sqrt_graph,
+    "horner_loop": horner_loop_graph,
 }
+
+# single-shot fabrics: one initiation -> one result token, and `k` in
+# random_feeds scales the LOOP TRIP COUNT, not a stream length
+SINGLE_SHOT = ("fibonacci", "gcd", "fib", "newton_sqrt", "horner_loop")
 
 
 def random_feeds(name: str, bench: Bench, k: int, rng=None) -> dict:
-    """A k-token random feed-stream dict for any bench (for fibonacci, k
-    is the iteration count).  One place for the per-bench input-shape
-    logic the drivers and tests used to each duplicate."""
+    """A k-token random feed-stream dict for any bench (for the
+    single-shot loop benches, k scales the trip count).  One place for
+    the per-bench input-shape logic the drivers and tests used to each
+    duplicate."""
     rng = np.random.default_rng(rng) if not hasattr(rng, "integers") \
         else rng
     n = len(bench.graph.input_arcs())
-    if name == "fibonacci":
+    if name in ("fibonacci", "fib"):    # k = loop iteration count
         return bench.make_feeds(int(k))
+    if name == "gcd":
+        # subtractive gcd of (k+1, b<=k+1) runs O(k) iterations
+        return bench.make_feeds(int(k) + 1,
+                                int(rng.integers(1, int(k) + 2)))
+    if name.startswith("newton_sqrt"):
+        return bench.make_feeds(float(rng.uniform(0.25, 100.0)))
+    if name.startswith("horner_loop"):
+        return bench.make_feeds(int(rng.integers(-4, 5)))
     if name.startswith("dot_prod"):
         return bench.make_feeds(rng.integers(0, 9, (k, n // 2)),
                                 rng.integers(0, 9, (k, n // 2)))
@@ -505,6 +651,6 @@ def random_feeds(name: str, bench: Bench, k: int, rng=None) -> dict:
 
 def tokens_out(name: str, k: int) -> int:
     """Result tokens a run of `random_feeds(name, ..., k)` produces: one
-    per stream element for DAG fabrics, one exit result for the
-    fibonacci loop (whatever its iteration count)."""
-    return 1 if name == "fibonacci" else k
+    per stream element for DAG fabrics, one exit result per run for the
+    single-shot loop fabrics (whatever their trip count)."""
+    return 1 if name in SINGLE_SHOT else k

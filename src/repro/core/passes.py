@@ -33,24 +33,49 @@ less work.  For full-field bit-identity (cycles/fired included) use the
 (``DataflowEngine(optimize=True)`` / ``compile_graph(optimize="spec")``),
 which is a pure layout permutation.
 
-**NDMERGE makes rewrites timing-sensitive.**  NDMERGE arbitration picks
-whichever input token *arrives first* (tie: a), so the winner depends on
-arc refill cadence, not just on values.  Folding replaces a
-periodically-refilled arc with an always-full const bus, and an
-identity splice removes a one-token pipeline register (tokens arrive a
-cycle earlier and the wire's capacity drops from two tokens to one) —
-either can flip which input wins a race.  Backpressure couples timing
-globally (a COPY whose outputs straddle two cones propagates a stall
-from one into the other), so no cone-local guard is sound: the fold and
-identity passes simply *bail out* of any graph that contains an
-NDMERGE, leaving it untouched.  DCE still runs — a removable region is
-disconnected from the live fabric by construction, so deleting it
-cannot perturb a live merge (and once a dead NDMERGE is deleted, later
-fixpoint rounds fold/splice the now merge-free remainder).
+**NDMERGE makes rewrites timing-sensitive — legality is REGION-SCOPED.**
+NDMERGE arbitration picks whichever input token *arrives first* (tie:
+a), so the winner depends on arc refill cadence, not just on values.
+Folding replaces a periodically-refilled arc with an always-full const
+bus, and an identity splice removes a one-token pipeline register
+(tokens arrive a cycle earlier and the wire's capacity drops from two
+tokens to one) — either can flip which input wins a race.  Backpressure
+couples timing globally (a COPY whose outputs straddle two cones
+propagates a stall from one into the other), so for a graph containing
+a *racy* NDMERGE no cone-local guard is sound and the fold/identity
+passes bail out entirely — the PR 3 position, unchanged.
 
-The identity splice is additionally restricted to acyclic graphs: on a
-cyclic path the removed register shrinks the loop's token capacity,
-which can change blocking/deadlock behavior even without an NDMERGE.
+The paper's **loop-entry** NDMERGE is different (DESIGN.md §10): its
+non-cycle input delivers exactly one initiation token per run (an
+initial-token annotation, or the single-shot feed contract that
+``TracedProgram.make_feeds`` enforces on loop fabrics) and every later
+token arrives on the back edge, *serialized by the cycle itself* — so
+its output value sequence is arrival-timing-independent, and the Kahn
+determinism argument that justified PR 3's rewrites extends to the
+whole graph.  ``_loop_analysis`` classifies each NDMERGE structurally:
+**loop-entry** iff the node lies on a directed cycle through exactly
+one of its inputs; anything else (acyclic NDMERGE, or a merge with two
+back edges) is **racy** and keeps the blanket bail-out.  When every
+NDMERGE is a loop entry, fold/splice run *region-scoped*:
+
+* nodes on directed cycles are never folded (impossible anyway — a
+  cycle input is never const) and never spliced (the removed register
+  is loop token capacity: blocking behavior would change);
+* a node whose output arc feeds an NDMERGE input is never folded —
+  turning the one-shot/periodic arc into an always-full const bus
+  would re-fire the merge every refill window;
+* arcs carrying initial-token annotations are never spliced away, and
+  a fold never targets them (their producers sit on the back-edge
+  cycle);
+* everything else — the acyclic, merge-free cones before, after, and
+  feeding the loop — folds/splices as in PR 3, because timing shifts
+  on a loop's *initiation* path cannot flip its entry merge (there is
+  no back-edge token to race until the initiation has happened).
+
+DCE is unchanged — a removable region is disconnected from the live
+fabric by construction, so deleting it cannot perturb a live merge
+(and once a dead NDMERGE is deleted, later fixpoint rounds fold/splice
+the now merge-free remainder).
 
 The passes run to a joint fixpoint: folding a node can turn its
 consumer into an identity, and splicing an identity can strand a dead
@@ -104,13 +129,15 @@ class PassReport:
 def _rebuild(graph: Graph, nodes: list[Node], consts: dict) -> Graph:
     g = Graph(name=graph.name)
     g.nodes = list(nodes)
-    # drop consts no longer referenced by any node: a const arc with no
-    # consumer would otherwise surface as a new environment-drained
-    # output bus (free-running token source)
+    # drop consts/inits no longer referenced by any node: a const arc
+    # with no consumer would otherwise surface as a new environment-
+    # drained output bus (free-running token source), and an orphaned
+    # initial-token annotation would fail validation
     used = {a for n in nodes for a in (*n.inputs, *n.outputs)}
     orig_out = set(graph.output_arcs())
     g.consts = {a: v for a, v in consts.items()
                 if a in used or a in orig_out}
+    g.inits = {a: v for a, v in graph.inits.items() if a in used}
     return g
 
 
@@ -118,8 +145,79 @@ def _const_value(consts, arc, dtype):
     return np.asarray(consts[arc], dtype).reshape(())
 
 
-def _has_ndmerge(graph: Graph) -> bool:
-    return any(n.op == Op.NDMERGE for n in graph.nodes)
+def _loop_analysis(graph: Graph) -> tuple[set[int], bool]:
+    """-> (nodes on directed cycles, any RACY ndmerge present).
+
+    An NDMERGE is a *loop entry* (race-free under the single-initiation
+    contract, see module docstring) iff it lies on a directed cycle
+    through exactly one of its inputs; every other NDMERGE — acyclic,
+    or merged by two back edges — is racy."""
+    cons = graph.consumers()
+    N = len(graph.nodes)
+    adj: list[list[int]] = [
+        sorted({j for a in n.outputs for j in cons.get(a, [])})
+        for n in graph.nodes]
+    # iterative Tarjan SCC
+    scc_id = [-1] * N
+    low = [0] * N
+    num = [-1] * N
+    count = 0
+    n_sccs = 0
+    stack: list[int] = []
+    on_stack = [False] * N
+    for root in range(N):
+        if num[root] != -1:
+            continue
+        work = [(root, 0)]
+        while work:
+            i, pi = work[-1]
+            if pi == 0:
+                num[i] = low[i] = count
+                count += 1
+                stack.append(i)
+                on_stack[i] = True
+            recursed = False
+            for k in range(pi, len(adj[i])):
+                j = adj[i][k]
+                if num[j] == -1:
+                    work[-1] = (i, k + 1)
+                    work.append((j, 0))
+                    recursed = True
+                    break
+                if on_stack[j]:
+                    low[i] = min(low[i], num[j])
+            if recursed:
+                continue
+            work.pop()
+            if work:
+                low[work[-1][0]] = min(low[work[-1][0]], low[i])
+            if low[i] == num[i]:
+                while True:
+                    j = stack.pop()
+                    on_stack[j] = False
+                    scc_id[j] = n_sccs
+                    if j == i:
+                        break
+                n_sccs += 1
+    size = [0] * n_sccs
+    for s in scc_id:
+        size[s] += 1
+    cyclic = {i for i in range(N)
+              if size[scc_id[i]] > 1 or i in adj[i]}
+    prod = graph.producers()
+    racy = False
+    for i, n in enumerate(graph.nodes):
+        if n.op != Op.NDMERGE:
+            continue
+        if i not in cyclic:
+            racy = True
+            continue
+        back_edges = sum(
+            1 for a in n.inputs
+            if any(scc_id[p] == scc_id[i] for p in prod.get(a, [])))
+        if back_edges != 1:
+            racy = True
+    return cyclic, racy
 
 
 def constant_fold(graph: Graph, dtype=np.int32) -> tuple[Graph, int]:
@@ -127,12 +225,18 @@ def constant_fold(graph: Graph, dtype=np.int32) -> tuple[Graph, int]:
     output arcs become const buses carrying the compile-time result.
     Iterates so chains of constants collapse completely.
 
-    Bails out (returns the graph unchanged) when the graph contains an
-    NDMERGE: a const bus is always full while the folded node refilled
-    its arc periodically, and that cadence change can flip which input
-    wins a downstream arbitration race (see module docstring)."""
-    if _has_ndmerge(graph):
+    Region-scoped legality (module docstring): bails out entirely when
+    the graph contains a *racy* NDMERGE (a const bus is always full
+    while the folded node refilled its arc periodically, and that
+    cadence change can flip which input wins the arbitration race);
+    with only loop-entry NDMERGEs it folds everywhere except nodes
+    whose output arc feeds an NDMERGE input or carries an initial-token
+    annotation — those arcs' token cadence IS the loop semantics."""
+    _, racy = _loop_analysis(graph)
+    if racy:
         return graph, 0
+    merge_fed = {a for n in graph.nodes if n.op == Op.NDMERGE
+                 for a in n.inputs}
     dtype = np.dtype(dtype)
     nodes = list(graph.nodes)
     consts = dict(graph.consts)
@@ -142,7 +246,10 @@ def constant_fold(graph: Graph, dtype=np.int32) -> tuple[Graph, int]:
         changed = False
         keep = []
         for n in nodes:
-            if n.op in _FOLDABLE and all(a in consts for a in n.inputs):
+            if (n.op in _FOLDABLE
+                    and all(a in consts for a in n.inputs)
+                    and n.outputs[0] not in merge_fed
+                    and n.outputs[0] not in graph.inits):
                 a = _const_value(consts, n.inputs[0], dtype)
                 b = (_const_value(consts, n.inputs[1], dtype)
                      if len(n.inputs) > 1 else a)
@@ -180,12 +287,15 @@ def eliminate_identities(graph: Graph, dtype=np.int32
     Skips the splice when it would fuse an environment input directly to
     an environment output (both interface arcs must keep existing).
 
-    Bails out (returns the graph unchanged) when the graph contains an
-    NDMERGE or is cyclic: a spliced node was a one-token pipeline
-    register, and removing it shifts arrival timing by a cycle and
-    shrinks the wire's capacity — which can flip a merge race, and on a
-    cyclic path can change blocking behavior (module docstring)."""
-    if _has_ndmerge(graph) or graph.is_cyclic():
+    Region-scoped legality (module docstring): bails out entirely when
+    the graph contains a *racy* NDMERGE (the spliced node was a
+    one-token pipeline register; removing it shifts arrival timing a
+    cycle earlier and can flip the race).  With only loop-entry
+    NDMERGEs it splices everywhere except nodes on directed cycles
+    (the lost register is loop token capacity — blocking behavior
+    would change) and wires carrying initial-token annotations."""
+    cyclic_nodes, racy = _loop_analysis(graph)
+    if racy:
         return graph, 0
     dtype = np.dtype(dtype)
     is_int = np.issubdtype(dtype, np.integer)
@@ -196,6 +306,10 @@ def eliminate_identities(graph: Graph, dtype=np.int32
     removed = 0
     for i, n in enumerate(nodes):
         if n is None or n.op not in _IDENTITY_B:
+            continue
+        if i in cyclic_nodes:
+            continue
+        if n.inputs[0] in graph.inits or n.outputs[0] in graph.inits:
             continue
         if not is_int and n.op in _INT_ONLY_IDENTITIES:
             continue

@@ -12,7 +12,8 @@ from __future__ import annotations
 import numpy as np
 
 
-def pack_arg_streams(name: str, arg_arcs, dtype, args) -> dict:
+def pack_arg_streams(name: str, arg_arcs, dtype, args,
+                     single_shot: bool = False) -> dict:
     if len(args) != len(arg_arcs):
         raise ValueError(
             f"{name}: expected {len(arg_arcs)} argument streams "
@@ -38,5 +39,12 @@ def pack_arg_streams(name: str, arg_arcs, dtype, args) -> dict:
                     "one token per program firing")
         streams.append((arc, v))
     k = 1 if k is None else k
+    if single_shot and k > 1:
+        raise ValueError(
+            f"{name}: loop-bearing fabrics initiate once per run (the "
+            "entry NDMERGEs consume exactly one initial token), so "
+            f"every argument feeds ONE token — got a {k}-token stream. "
+            "Run the program once per stream element, e.g. one "
+            "DataflowServer request per evaluation.")
     return {arc: (np.full((k,), v, dtype) if v.ndim == 0 else v)
             for arc, v in streams}

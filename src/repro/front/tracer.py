@@ -33,17 +33,27 @@ class TracedProgram(Graph):
       argument is unused (the adapter then ignores its stream).
     out_arcs: one output arc per program result, in return order.
     dtype:   the fabric's execution dtype (all avals share it).
+    has_loops: the program lowered ``lax`` control flow onto the
+      cyclic loop schema (DESIGN.md §10).  Loop fabrics initiate ONCE
+      per run — the entry NDMERGEs consume exactly one initial token —
+      so ``make_feeds`` enforces one token per argument; evaluate a
+      stream by running the program per element (the
+      :class:`~repro.serve.dataflow_server.DataflowServer` does this
+      as one request per evaluation).
     """
     arg_arcs: list = dataclasses.field(default_factory=list)
     out_arcs: list = dataclasses.field(default_factory=list)
     dtype: object = np.dtype(np.int32)
+    has_loops: bool = False
 
     def make_feeds(self, *args) -> dict:
         """Feed adapter: positional [k]-token streams (scalars
         broadcast to the common k) -> arc->stream dict for the
-        engines, ``run_batch``, and ``DataflowServer`` requests."""
+        engines, ``run_batch``, and ``DataflowServer`` requests.
+        Loop-bearing programs accept only single-token streams (see
+        ``has_loops``)."""
         return pack_arg_streams(self.name, self.arg_arcs, self.dtype,
-                                args)
+                                args, single_shot=self.has_loops)
 
     @property
     def out_arc(self) -> str:
@@ -136,6 +146,7 @@ def trace(fn, *avals, name: str | None = None,
     ctx.const_args = const_args
     results = lower_jaxpr(ctx, closed.jaxpr, closed.consts, None)
     prog.arg_arcs = list(ctx.created_inputs)
+    prog.has_loops = ctx.has_loops
 
     out_arcs = []
     for k, (arc, streamy) in enumerate(results):
@@ -159,5 +170,6 @@ def trace(fn, *avals, name: str | None = None,
     # would surface as a free-running environment output bus — prune
     used = {a for n in prog.nodes for a in (*n.inputs, *n.outputs)}
     prog.consts = {a: v for a, v in prog.consts.items() if a in used}
+    prog.inits = {a: v for a, v in prog.inits.items() if a in used}
     prog.validate()
     return prog

@@ -34,6 +34,16 @@ Traced programs (:mod:`repro.front`, DESIGN.md §9) serve through the
 same machinery: a ``TracedProgram`` is a ``Graph``, so its assembler
 emission is its cache signature like any hand-assembled fabric —
 :meth:`DataflowServer.for_fn` traces and serves in one step.
+
+Loop programs (DESIGN.md §10) are where per-slot lifecycle earns its
+keep: a ``lax.while_loop``-bearing request has a *data-dependent trip
+count*, so its residency is unknowable at admission.  Each request is
+one loop initiation (:meth:`DataflowServer.submit_args`); the slot's
+idle-tail detection IS the loop-termination signal (the exit BRANCH
+drains the result and the cycle goes quiet), short loops harvest and
+refill while long ones keep iterating, and a divergent loop is
+force-harvested at the engine's ``max_cycles`` cap with
+``metrics.truncated`` set instead of wedging its slot.
 """
 from __future__ import annotations
 
@@ -187,6 +197,20 @@ class DataflowServer:
         srv.make_feeds = prog.make_feeds
         return srv
 
+    def submit_args(self, *args) -> int:
+        """Submit one *evaluation* of a traced program (``for_fn``
+        servers): ``make_feeds(*args)`` + ``submit`` in one step.  This
+        is the natural request shape for loop fabrics (DESIGN.md §10):
+        one initiation per request, data-dependent trip count inside
+        the slot, per-slot quiescence detection ending it — requests
+        that never quiesce are force-harvested at the engine's
+        ``max_cycles`` cap with ``metrics.truncated`` set."""
+        if not hasattr(self, "make_feeds"):
+            raise AttributeError(
+                "submit_args needs a server built by for_fn (only "
+                "traced programs carry a positional feed adapter)")
+        return self.submit(self.make_feeds(*args))
+
     # -- admission ------------------------------------------------------
     def submit(self, request) -> int:
         """Enqueue a request (a :class:`Request` or a bare feeds dict);
@@ -244,7 +268,8 @@ class DataflowServer:
         cap = self.engine.max_cycles
         results = self._harvest_slots(
             [b for b in sorted(self._resident)
-             if not self.state.quiesced[b] and self.state.base[b] >= cap])
+             if not self.state.quiesced[b] and self.state.base[b] >= cap],
+            truncated=True)
         self._admit()
         if not self._resident:
             return results
@@ -254,7 +279,8 @@ class DataflowServer:
         self.block += 1
         return results + self._harvest_slots(self.state.quiesced_slots())
 
-    def _harvest_slots(self, done: list[int]) -> list[Result]:
+    def _harvest_slots(self, done: list[int],
+                       truncated: bool = False) -> list[Result]:
         if not done:
             return []
         self.state, engine_results = self.engine.harvest(self.state, done)
@@ -270,7 +296,8 @@ class DataflowServer:
                     queue_wait_blocks=admitted - queued,
                     residency_blocks=er.dispatches,
                     residency_cycles=er.cycles,
-                    tokens_out=sum(er.counts.values()))))
+                    tokens_out=sum(er.counts.values()),
+                    truncated=truncated)))
         return results
 
     def drain(self) -> list[Result]:

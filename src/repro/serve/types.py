@@ -51,6 +51,10 @@ class RequestMetrics:
     residency_blocks: int     # block dispatches while resident
     residency_cycles: int     # fabric cycles the request ran
     tokens_out: int           # tokens drained across all output arcs
+    truncated: bool = False   # hit the engine's max_cycles cap before
+    #                           quiescing (e.g. a loop fabric whose
+    #                           predicate never went false) — the slot
+    #                           was force-harvested, results are partial
 
 
 @dataclasses.dataclass

@@ -34,8 +34,10 @@ def test_roundtrip_is_isomorphic(name, bench):
     g2 = asm.parse(asm.emit(g), name=g.name)
     assert [(n.op, n.inputs, n.outputs) for n in g.nodes] == \
            [(n.op, n.inputs, n.outputs) for n in g2.nodes]
-    assert {a: int(v) for a, v in g.consts.items()} == \
-           {a: int(v) for a, v in g2.consts.items()}
+    assert {a: float(v) for a, v in g.consts.items()} == \
+           {a: float(v) for a, v in g2.consts.items()}
+    assert {a: float(v) for a, v in g.inits.items()} == \
+           {a: float(v) for a, v in g2.inits.items()}
     assert g.input_arcs() == g2.input_arcs()
     assert g.output_arcs() == g2.output_arcs()
     assert g.is_cyclic() == g2.is_cyclic()
@@ -49,7 +51,63 @@ def test_roundtrip_emit_is_fixed_point(name, bench):
     assert asm.emit(asm.parse(text)) == text
 
 
-@pytest.mark.parametrize("name", ["fibonacci", "vector_sum", "pop_count"])
+def test_init_annotation_round_trip_and_errors():
+    """Initial-token annotations (loop back-edge registers, ISSUE 5):
+    emit + parse round-trip, value classes preserved, and the parse
+    error paths name the offending statement."""
+    g = Graph(name="loop")
+    g.add(Op.NDMERGE, ["back", "seed"], ["c"])
+    g.add(Op.COPY, ["c"], ["tap", "d"])
+    g.add(Op.ADD, ["tap", "one"], ["back"])
+    g.const("one", 1)
+    g.init("seed", 7)
+    g.validate()
+    text = asm.emit(g)
+    assert "init seed = 7;" in text
+    g2 = asm.parse(text, name="loop")
+    assert g2.inits == {"seed": 7} and g2.consts == {"one": 1}
+    assert asm.emit(g2) == text
+    assert g2.input_arcs() == []        # init arcs are not env inputs
+    # float init values round-trip exactly (like float consts)
+    g.inits["seed"] = -0.5
+    g3 = asm.parse(asm.emit(g))
+    assert g3.inits["seed"] == -0.5
+    with pytest.raises(SyntaxError, match="redeclared"):
+        asm.parse("init a = 1; init a = 2; sink a;")
+    with pytest.raises(SyntaxError, match="both const and init"):
+        asm.parse("const a = 1; init a = 2; sink a;")
+    with pytest.raises(SyntaxError, match="bad init declaration"):
+        asm.parse("init a;")
+    with pytest.raises(ValueError, match="no consumer"):
+        asm.parse("init a = 1; add x, y, z;")
+
+
+def test_init_property_random_values_run_identically():
+    """Property: any init value on the loop seed register produces the
+    same run from the parsed graph as from the authored one."""
+    rng = np.random.default_rng(11)
+    for _ in range(5):
+        seed_v = int(rng.integers(-50, 50))
+        g = Graph(name="acc")
+        g.add(Op.NDMERGE, ["back", "ini"], ["c"])
+        g.add(Op.COPY, ["c"], ["tap", "d"])
+        g.add(Op.ADD, ["tap", "x"], ["back"])
+        g.init("ini", seed_v)
+        g.validate()
+        g2 = asm.parse(asm.emit(g))
+        feeds = {"x": rng.integers(-9, 9, (3,))}
+        want = run_reference(g, feeds, max_cycles=60)
+        got = run_reference(g2, feeds, max_cycles=60)
+        assert got.cycles == want.cycles and got.fired == want.fired
+        assert got.counts == want.counts
+        for a, c in want.counts.items():
+            if c:
+                assert np.asarray(got.outputs[a]).item() == \
+                    np.asarray(want.outputs[a]).item(), (seed_v, a)
+
+
+@pytest.mark.parametrize("name", ["fibonacci", "vector_sum", "pop_count",
+                                  "gcd", "horner_loop"])
 def test_roundtrip_behaves_identically(name):
     bench = library.BENCHES[name]() if name != "vector_sum" \
         else library.vector_sum_graph(8)

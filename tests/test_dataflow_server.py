@@ -60,10 +60,17 @@ def _check(got, want, tag):
                 int(np.asarray(want.outputs[a])), (tag, a)
 
 
+@functools.lru_cache(maxsize=None)
+def _bench_dtype(name):
+    return np.dtype(_bench(name).dtype)
+
+
 @pytest.mark.parametrize("name", sorted(library.BENCHES))
 @pytest.mark.parametrize("K", KS)
 @pytest.mark.parametrize("slots", SLOTS)
 def test_continuous_matches_solo_runs(name, K, slots):
+    if _bench_dtype(name) != np.int32:
+        pytest.skip(f"{name}: the resumable slot API is int32-only")
     bench, eng, feeds, solos = _eng_and_solos(name, K)
     srv = DataflowServer(bench.graph, slots=slots, engine=eng)
     # mid-flight admission: 3 requests up front, the rest arrive while

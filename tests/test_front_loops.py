@@ -1,0 +1,387 @@
+"""Loop frontend (ISSUE 5): lax control flow -> cyclic loop fabrics.
+
+The acceptance property: a ``lax.while_loop``-bearing traced program
+with a data-dependent trip count (gcd) compiles through the single
+``compile()`` entry point and runs bit-identical across reference x
+xla x pallas — and equal to plain jax execution of the same function;
+region-scoped passes win >= 1 fold on a loop-bearing graph without
+changing outputs or token counts; the DataflowServer serves it end to
+end with exact per-request token metrics.
+
+Plus the schema's edge cases: fori_loop with traced bounds (streamy
+loop invariant -> synthetic pass-through carry), static fori_loop
+(carry-only scan), zero-trip loops, nested loops, literal next-state
+materialization, const_args invariants as sticky buses, and the
+single-initiation feed contract.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import asm, library, passes
+from repro.core.compile import GraphTraits, compile, compile_fn
+from repro.core.engine import DataflowEngine, run_reference
+from repro.front import LoweringError, trace
+
+I32 = np.int32
+
+
+def _gcd_fn():
+    def gcd(a, b):
+        def body(c):
+            x, y = c
+            return (jnp.where(x > y, x - y, x),
+                    jnp.where(x > y, y, y - x))
+        return lax.while_loop(lambda c: c[0] != c[1], body, (a, b))[0]
+    return gcd
+
+
+def _check_full(got, want, tag):
+    assert got.cycles == want.cycles, (tag, got.cycles, want.cycles)
+    assert got.fired == want.fired, (tag, got.fired, want.fired)
+    assert got.counts == want.counts, (tag, got.counts, want.counts)
+    for a, c in want.counts.items():
+        if c:
+            assert np.asarray(got.outputs[a]).item() == \
+                np.asarray(want.outputs[a]).item(), (tag, a)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: gcd through the single compile() entry point
+# ---------------------------------------------------------------------------
+def test_gcd_bit_identical_across_executors_and_jax():
+    gcd = _gcd_fn()
+    prog = trace(gcd, I32, I32, name="gcd")
+    assert prog.has_loops and prog.is_cyclic()
+    cases = [(12, 18), (7, 7), (100, 64), (81, 27), (1, 99), (360, 84)]
+    for a, b in cases:
+        feeds = prog.make_feeds([a], [b])
+        want = run_reference(prog, feeds)
+        # one initiation -> exactly one result token, equal to python
+        # AND plain jax execution of the same function
+        assert want.counts[prog.out_arc] == 1
+        got = np.asarray(want.outputs[prog.out_arc]).item()
+        assert got == math.gcd(a, b) == int(gcd(jnp.int32(a),
+                                                jnp.int32(b)))
+        for backend in ("reference", "xla", "pallas"):
+            for K in (1, 16):
+                run = compile(prog, backend=backend, block_cycles=K)
+                _check_full(run(feeds), want, (a, b, backend, K))
+        # the unrolled token-presence SSA executor agrees too
+        run = compile(prog, backend="unrolled")
+        _check_full(run(feeds), want, (a, b, "unrolled"))
+
+
+def test_loop_region_passes_win_without_changing_observables():
+    """Region-scoped legality (ISSUE 5 acceptance): >= 1 fold on a
+    loop-bearing graph, outputs and token counts untouched."""
+    def f(a, n, k):
+        return lax.fori_loop(0, n, lambda i, c: c + k, a + k * 2)
+
+    prog = trace(f, I32, I32, I32, const_args={2: 5}, name="loopfold")
+    opt, report = passes.optimize_graph(prog)
+    assert report.folded >= 1, report.summary()
+    for a, n in [(3, 4), (0, 0), (7, 2)]:
+        feeds = prog.make_feeds([a], [n])
+        want = run_reference(prog, feeds)
+        assert np.asarray(want.outputs[prog.out_arc]).item() == \
+            int(f(jnp.int32(a), jnp.int32(n), jnp.int32(5)))
+        for g in (opt,):
+            got = run_reference(g, feeds)
+            assert got.counts == want.counts, (a, n)
+            for arc, c in want.counts.items():
+                if c:
+                    assert np.asarray(got.outputs[arc]).item() == \
+                        np.asarray(want.outputs[arc]).item(), (a, n, arc)
+        eng = DataflowEngine(opt, backend="xla", block_cycles=4,
+                             optimize=True)
+        got = eng.run(feeds)
+        assert got.counts == want.counts
+        assert np.asarray(got.outputs[prog.out_arc]).item() == \
+            np.asarray(want.outputs[prog.out_arc]).item()
+
+
+def test_gcd_serves_with_exact_token_metrics():
+    """End-to-end through DataflowServer (ISSUE 5 acceptance): one
+    request per evaluation, data-dependent residency, exact tokens."""
+    from repro.serve.dataflow_server import DataflowServer
+    srv = DataflowServer.for_fn(_gcd_fn(), I32, I32, name="gcd",
+                                slots=3, block_cycles=8, backend="xla")
+    cases = [(12, 18), (100, 64), (7, 7), (81, 27), (360, 84), (13, 9)]
+    uids = [srv.submit_args(a, b) for a, b in cases]
+    res = {r.uid: r for r in srv.drain()}
+    for uid, (a, b) in zip(uids, cases):
+        r = res[uid]
+        assert np.asarray(
+            r.engine.outputs[srv.traced.out_arc]).item() == math.gcd(a, b)
+        assert r.metrics.tokens_out == 1
+        assert not r.metrics.truncated
+        # bit-identical to a solo engine run, whatever rode alongside
+        solo = srv.engine.run(srv.make_feeds(a, b))
+        _check_full(r.engine, solo, (a, b))
+
+
+def test_divergent_loop_is_truncated_not_wedged():
+    """A loop whose predicate never goes false hits the max_cycles cap:
+    the slot is force-harvested with metrics.truncated set, and
+    co-resident healthy requests are unaffected."""
+    from repro.serve.dataflow_server import DataflowServer
+
+    def diverge(a):
+        return lax.while_loop(lambda c: c > 0, lambda c: c + 1, a)
+
+    srv = DataflowServer.for_fn(diverge, I32, slots=2, block_cycles=8,
+                                backend="xla", max_cycles=64)
+    u_bad = srv.submit_args(1)      # diverges
+    u_ok = srv.submit_args(0)       # zero-trip, quiesces immediately
+    res = {r.uid: r for r in srv.drain()}
+    assert res[u_bad].metrics.truncated
+    assert not res[u_ok].metrics.truncated
+    assert np.asarray(
+        res[u_ok].engine.outputs[srv.traced.out_arc]).item() == 0
+    assert srv.pending == 0 and not srv.state.active.any()
+
+
+# ---------------------------------------------------------------------------
+# schema coverage: fori / scan / invariants / nesting / edge cases
+# ---------------------------------------------------------------------------
+def test_fori_loop_traced_bound_synthetic_carry():
+    """Dynamic fori lowers to while; the bound is loop-invariant but
+    streamy, so it rides a synthetic pass-through carry."""
+    def fib(n):
+        r = lax.fori_loop(0, n, lambda i, c: (c[1], c[0] + c[1]),
+                          (jnp.int32(0), jnp.int32(1)))
+        return r[0]
+
+    prog = trace(fib, I32, name="fib")
+    assert prog.has_loops and prog.inits   # compile-time carry inits
+    for n in range(10):
+        r = run_reference(prog, prog.make_feeds([n]))
+        assert np.asarray(r.outputs[prog.out_arc]).item() == \
+            int(fib(jnp.int32(n))), n
+
+
+def test_static_fori_is_carry_only_scan():
+    """Static bounds trace to the scan primitive: a synthetic counter
+    carry + IFLT trip decider; the x carry is a pure pass-through."""
+    def horner_loop(x):
+        r = lax.fori_loop(0, 6, lambda i, c: (c[0] * c[1] + 1, c[1]),
+                          (jnp.int32(1), x))
+        return r[0]
+
+    prog = trace(horner_loop, I32, name="hl")
+    assert prog.has_loops
+    # counter init + the two carry inits are initial-token annotations
+    assert len(prog.inits) >= 1
+    for x in (-3, 0, 1, 2, 4):
+        r = run_reference(prog, prog.make_feeds([x]))
+        assert np.asarray(r.outputs[prog.out_arc]).item() == \
+            int(horner_loop(jnp.int32(x))), x
+
+
+def test_zero_trip_loops_exit_with_init_values():
+    def f(a):
+        return lax.fori_loop(0, 0, lambda i, c: c + 1, a)
+    prog = trace(f, I32, name="zero_trip")
+    r = run_reference(prog, prog.make_feeds([41]))
+    assert r.counts[prog.out_arc] == 1
+    assert np.asarray(r.outputs[prog.out_arc]).item() == 41
+
+    def g(a):       # while whose predicate is false on entry
+        return lax.while_loop(lambda c: c < 0, lambda c: c - 1, a)
+    prog2 = trace(g, I32, name="zero_trip_while")
+    r2 = run_reference(prog2, prog2.make_feeds([5]))
+    assert np.asarray(r2.outputs[prog2.out_arc]).item() == 5
+
+
+def test_nested_loops():
+    def f(n):
+        def outer(i, acc):
+            inner = lax.fori_loop(0, 3, lambda j, s: s + i + 1, acc)
+            return inner
+        return lax.fori_loop(0, n, outer, jnp.int32(0))
+
+    prog = trace(f, I32, name="nested")
+    for n in (0, 1, 2, 4):
+        r = run_reference(prog, prog.make_feeds([n]))
+        assert np.asarray(r.outputs[prog.out_arc]).item() == \
+            int(f(jnp.int32(n))), n
+
+
+def test_literal_next_state_is_materialized_per_iteration():
+    """A body returning a literal gets a DMERGE materializer gated on a
+    streamy back value — the const bus must NOT free-run into the entry
+    merge (that would re-initiate the loop after exit)."""
+    def f(a):
+        def body(c):
+            return (jnp.int32(0), c[1] + 1)
+        r = lax.while_loop(lambda c: c[0] != 0, body, (a, jnp.int32(0)))
+        return r[1]
+
+    prog = trace(f, I32, name="reset_count")
+    for a in (0, 1, 5):
+        feeds = prog.make_feeds([a])
+        want = int(f(jnp.int32(a)))
+        r = run_reference(prog, feeds)
+        assert r.counts[prog.out_arc] == 1      # no re-initiation
+        assert np.asarray(r.outputs[prog.out_arc]).item() == want, a
+        assert r.cycles < 100_000               # quiesces
+        eng = DataflowEngine(prog, backend="pallas", block_cycles=4)
+        _check_full(eng.run(feeds), r, a)
+
+
+def test_all_const_next_state_uses_predicate_gate():
+    """A loop whose EVERY next-state value is a literal is still
+    data-dependent (the zero-trip path returns the inits), so it must
+    lower — the const-token materializer gates off the predicate when
+    no streamy back value exists."""
+    def f(x, y):
+        return lax.while_loop(lambda c: c[0] == c[1],
+                              lambda c: (jnp.int32(1), jnp.int32(2)),
+                              (x, y))[0]
+
+    prog = trace(f, I32, I32, name="const_state")
+    for x, y in [(5, 9), (5, 5), (1, 2), (2, 2)]:
+        feeds = prog.make_feeds([x], [y])
+        want = int(f(jnp.int32(x), jnp.int32(y)))
+        r = run_reference(prog, feeds)
+        assert r.counts[prog.out_arc] == 1, (x, y, r.counts)
+        assert np.asarray(r.outputs[prog.out_arc]).item() == want, (x, y)
+        assert r.cycles < 100_000
+        eng = DataflowEngine(prog, backend="pallas", block_cycles=4)
+        _check_full(eng.run(feeds), r, (x, y))
+
+
+def test_const_args_invariants_ride_sticky_buses():
+    """A const-bound loop invariant is a sticky const bus inside the
+    cones — no synthetic carry, and the folder sees const-fed nodes."""
+    def f(a, k):
+        return lax.fori_loop(0, 4, lambda i, c: c * k + 1, a)
+
+    prog = trace(f, I32, I32, const_args={1: 3}, name="inv_const")
+    for a in (0, 1, 5):
+        r = run_reference(prog, prog.make_feeds([a]))
+        assert np.asarray(r.outputs[prog.out_arc]).item() == \
+            int(f(jnp.int32(a), jnp.int32(3))), a
+
+
+def test_float_while_loop_matches_jax_bitwise():
+    def newton(n):
+        return lax.fori_loop(0, 8, lambda i, x: 0.5 * (x + n / x),
+                             n * 0.5 + 0.5)
+
+    prog = trace(newton, np.float32, name="newton")
+    for v in (2.0, 9.0, 81.0, 0.25):
+        r = run_reference(prog, prog.make_feeds([v]), dtype=np.float32)
+        got = np.float32(np.asarray(r.outputs[prog.out_arc]))
+        want = np.float32(newton(jnp.float32(v)))
+        assert got.tobytes() == want.tobytes(), (v, got, want)
+        eng = DataflowEngine(prog, dtype=np.float32, backend="xla",
+                             block_cycles=8)
+        r2 = eng.run(prog.make_feeds([v]))
+        assert np.float32(np.asarray(
+            r2.outputs[prog.out_arc])).tobytes() == want.tobytes()
+
+
+def test_loop_fabric_round_trips_through_asm():
+    """Initial-token annotations survive emit -> parse -> emit (the
+    serving signature cache hashes the emission)."""
+    prog = trace(_gcd_fn(), I32, I32, name="gcd")
+    hl = trace(lambda x: lax.fori_loop(
+        0, 5, lambda i, c: (c[0] + c[1], c[1]), (jnp.int32(0), x))[0],
+        I32, name="hl")
+    assert hl.inits            # scan counter + carry initial tokens
+    for g in (prog, hl):
+        text = asm.emit(g)
+        g2 = asm.parse(text, name=g.name)
+        assert asm.emit(g2) == text
+        assert {a: float(v) for a, v in g2.inits.items()} == \
+               {a: float(v) for a, v in g.inits.items()}
+        feeds = {a: [7] for a in g.input_arcs()}
+        _check_full(run_reference(g2, feeds), run_reference(g, feeds),
+                    g.name)
+
+
+def test_single_initiation_feed_contract():
+    prog = trace(_gcd_fn(), I32, I32, name="gcd")
+    with pytest.raises(ValueError, match="initiate once"):
+        prog.make_feeds([1, 2], [3, 4])
+    # scalars broadcast to the single shot fine
+    feeds = prog.make_feeds(6, 4)
+    assert all(len(v) == 1 for v in feeds.values())
+
+
+# ---------------------------------------------------------------------------
+# the GraphTraits probe + unified compile() routing (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+def test_traits_probe_classifies_fabrics():
+    dag = library.vector_sum_graph(8).graph
+    t = GraphTraits.probe(dag)
+    assert t.tokens_out_static and not t.cyclic and not t.control_ops
+    loop = trace(_gcd_fn(), I32, I32, name="gcd")
+    t2 = GraphTraits.probe(loop)
+    assert t2.cyclic and "NDMERGE" in t2.control_ops
+    assert not t2.tokens_out_static
+    fib_init = trace(lambda x: lax.fori_loop(
+        0, 3, lambda i, c: c + x * 0 + 1, x), I32, name="f")
+    assert GraphTraits.probe(fib_init).has_inits
+
+
+def test_dag_executor_refuses_token_presence_graphs_naming_trait():
+    """The satellite bugfix: asking the lockstep executor for a fabric
+    that needs token-presence semantics raises a precise error naming
+    the blocking trait — never a silently-lockstep compilation."""
+    prog = trace(_gcd_fn(), I32, I32, name="gcd")
+    with pytest.raises(ValueError, match="cyclic=True"):
+        compile(prog, backend="dag")
+    with pytest.raises(ValueError, match="control_ops"):
+        compile(prog, backend="dag")
+    sel = trace(lambda x, y: jnp.where(x > y, x - y, y - x), I32, I32)
+    with pytest.raises(ValueError, match="control_ops=.*DMERGE"):
+        compile(sel, backend="dag")
+    with pytest.raises(ValueError, match="cyclic=True"):
+        compile_fn(_gcd_fn(), I32, I32, backend="dag")
+    with pytest.raises(ValueError, match="backend 'bogus' not in"):
+        compile(prog, backend="bogus")
+    # auto + the engine default route loop fabrics correctly
+    for backend in ("auto", "xla"):
+        run = compile_fn(_gcd_fn(), I32, I32, backend=backend)
+        r = run(run.make_feeds([21], [14]))
+        assert np.asarray(r.outputs[run.out_arcs[0]]).item() == 7
+        assert run.traits.cyclic
+
+
+def test_deprecated_wrappers_are_thin():
+    from repro.core.compile import compile_cyclic, compile_graph
+    bench = library.fibonacci_graph()
+    feeds = bench.make_feeds(9)
+    want = run_reference(bench.graph, feeds)
+    _check_full(compile_graph(bench.graph, backend="xla",
+                              block_cycles=4)(feeds), want, "wrapper")
+    _check_full(compile_cyclic(bench.graph)(feeds), want, "cyclic")
+    run = compile_graph(bench.graph)     # auto -> unrolled, with traits
+    assert run.traits.cyclic
+    _check_full(run(feeds), want, "auto")
+
+
+# ---------------------------------------------------------------------------
+# rejected programs: precise LoweringErrors
+# ---------------------------------------------------------------------------
+def test_loop_lowering_errors_name_the_problem():
+    # a scan that STACKS per-iteration outputs is not carry-only
+    with pytest.raises(LoweringError, match="carry-only"):
+        trace(lambda x: lax.scan(lambda c, _: (c + 1, c), x, None,
+                                 length=4)[0], I32)
+    # non-scalar loop state (the broadcast feeding it already cannot
+    # ride a scalar-token arc)
+    with pytest.raises(LoweringError, match="shape"):
+        trace(lambda x: lax.while_loop(
+            lambda c: c.sum() < 5, lambda c: c + 1,
+            jnp.zeros((3,), jnp.int32) + x)[0], I32)
+    with pytest.raises(LoweringError, match="predicate"):
+        trace(lambda x: lax.while_loop(
+            lambda c: jnp.bool_(False), lambda c: c + 1, x), I32)

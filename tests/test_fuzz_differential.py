@@ -1,13 +1,19 @@
-"""Differential fuzzing across every executor (ISSUE 4).
+"""Differential fuzzing across every executor (ISSUE 4 + ISSUE 5).
 
-Two unbounded case generators feed one oracle:
+Three unbounded case generators feed one oracle:
 
 * random well-formed acyclic GRAPHS over the full opcode vocabulary
   (valid ARITY, one producer/receiver per arc, every opcode class
   reachable across the pool — asserted below);
 * random traceable EXPRESSIONS lowered through the ``repro.front``
   frontend, whose plain-numpy evaluation is an independent oracle for
-  the synthesized fabric.
+  the synthesized fabric;
+* random LOOP PROGRAMS (ISSUE 5): bounded-trip ``lax`` control flow
+  (static fori -> carry-only scan, traced-bound fori -> while with a
+  synthetic invariant carry) over carries drawn from the int32 /
+  uint32 / float32 dtype set, lowered onto the cyclic loop schema and
+  pinned bit-identical across reference x xla x pallas x optimize
+  levels AND against plain jax execution of the same function.
 
 Contract per case, against the pure-numpy reference engine:
 
@@ -44,6 +50,7 @@ except ImportError:          # CI installs hypothesis; local runs may not
 
 FULL = os.environ.get("REPRO_FUZZ", "").lower() == "full"
 N_GRAPHS, N_PROGS, N_FEEDS = (16, 10, 8) if FULL else (5, 4, 2)
+N_LOOPS = 12 if FULL else 3
 KS_ALL = (1, 4, 16)
 CAP = 192                    # cycle cap: free-running fabrics are fine
 
@@ -128,45 +135,56 @@ def test_graph_generator_reaches_every_opcode_class():
 # ---------------------------------------------------------------------------
 # the differential matrix (shared by both generators)
 # ---------------------------------------------------------------------------
+def _same_bits(a, b) -> bool:
+    """Bit-exact scalar comparison (keeps signed zeros and NaNs honest
+    for the float-dtype loop cases)."""
+    return np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
 def _check_full(got, want, tag):
     assert got.cycles == want.cycles, (tag, got.cycles, want.cycles)
     assert got.fired == want.fired, (tag, got.fired, want.fired)
     assert got.counts == want.counts, (tag, got.counts, want.counts)
     for a, c in want.counts.items():
         if c:
-            assert int(np.asarray(got.outputs[a])) == \
-                int(np.asarray(want.outputs[a])), (tag, a)
+            assert _same_bits(got.outputs[a], want.outputs[a]), (tag, a)
 
 
 def _check_observables(got, want, tag):
     for a, c in want.counts.items():
         assert got.counts[a] == c, (tag, a)
         if c:
-            assert int(np.asarray(got.outputs[a])) == \
-                int(np.asarray(want.outputs[a])), (tag, a)
+            assert _same_bits(got.outputs[a], want.outputs[a]), (tag, a)
 
 
-def differential_case(g: Graph, feeds_list, Ks, tag):
+def differential_case(g: Graph, feeds_list, Ks, tag, dtype=np.int32):
     """One graph, many feed streams, the whole backend x optimize x K
     matrix.  Engines compile once per (backend, K, level) and rerun
-    across the feed streams."""
-    g_full, _ = passes.optimize_graph(g)
-    oracles = [run_reference(g, f, max_cycles=CAP) for f in feeds_list]
-    oracles_full = [run_reference(g_full, f, max_cycles=CAP)
+    across the feed streams.  Non-int32 dtypes skip the pallas engine
+    (its kernels are scalar-int32-only)."""
+    dtype = np.dtype(dtype)
+    g_full, _ = passes.optimize_graph(g, dtype=dtype)
+    oracles = [run_reference(g, f, dtype=dtype, max_cycles=CAP)
+               for f in feeds_list]
+    oracles_full = [run_reference(g_full, f, dtype=dtype, max_cycles=CAP)
                     for f in feeds_list]
     # the reference backend is the oracle itself; pin the plumbing once
-    ref_eng = DataflowEngine(g, backend="reference", max_cycles=CAP)
+    ref_eng = DataflowEngine(g, dtype=dtype, backend="reference",
+                             max_cycles=CAP)
     _check_full(ref_eng.run(feeds_list[0]), oracles[0], (tag, "ref"))
     for want, want_full in zip(oracles, oracles_full):
         if want.cycles < CAP:    # authored fabric quiesced: rewrite
             _check_observables(want_full, want, (tag, "rewrite"))
     for backend in ("xla", "pallas"):
+        if backend == "pallas" and dtype != np.int32:
+            continue
         for K in Ks:
-            e_off = DataflowEngine(g, backend=backend, block_cycles=K,
-                                   max_cycles=CAP)
-            e_spec = DataflowEngine(g, backend=backend, block_cycles=K,
-                                    max_cycles=CAP, optimize=True)
-            e_full = DataflowEngine(g_full, backend=backend,
+            e_off = DataflowEngine(g, dtype=dtype, backend=backend,
+                                   block_cycles=K, max_cycles=CAP)
+            e_spec = DataflowEngine(g, dtype=dtype, backend=backend,
+                                    block_cycles=K, max_cycles=CAP,
+                                    optimize=True)
+            e_full = DataflowEngine(g_full, dtype=dtype, backend=backend,
                                     block_cycles=K, max_cycles=CAP,
                                     optimize=True)
             for i, f in enumerate(feeds_list):
@@ -285,6 +303,106 @@ def test_fuzz_random_expressions(seed):
             int(want[-1]), (seed, "numpy-differential")
     # and the full executor matrix agrees bit-for-bit
     differential_case(prog, feeds_list, _ks(seed), f"expr{seed}")
+
+
+# ---------------------------------------------------------------------------
+# generator 3: random bounded loop programs (jax itself is the oracle)
+# ---------------------------------------------------------------------------
+_LOOP_DTYPES = (np.int32, np.uint32, np.float32)
+_LOOP_BIN_INT = ["add", "sub", "mul", "and", "or", "xor", "max", "min"]
+_LOOP_BIN_FLT = ["add", "sub", "mul", "max", "min"]
+_LOOP_CMP = ["gt", "ge", "lt", "le", "eq", "ne"]
+
+
+def random_loop_case(seed: int):
+    """-> (fn, n_args, dtype, static).  ``fn`` is a jax program whose
+    whole body is a bounded loop: static trip count (fori -> carry-only
+    scan) for every dtype, traced-bound fori (-> while with a synthetic
+    invariant carry) additionally for int32.  Carry updates draw from
+    the dtype's closed op set (wraparound / IEEE are the contract) with
+    optional ``jnp.where`` data-dependence; float operands stay in
+    [-2, 2] over <= 5 trips so no value can overflow to inf (bit-exact
+    comparison would still hold, but finite values are a sharper
+    differential)."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    rng = np.random.default_rng(7000 + seed)
+    dtype = _LOOP_DTYPES[seed % 3]
+    is_f = dtype == np.float32
+    n_args = int(rng.integers(1, 3))
+    n_carry = int(rng.integers(1, 3))
+    T = int(rng.integers(0, 6))
+    static = bool(dtype != np.int32 or rng.random() < 0.5)
+    bins = _LOOP_BIN_FLT if is_f else _LOOP_BIN_INT
+    specs = []
+    for _ in range(n_carry):
+        op = bins[int(rng.integers(len(bins)))]
+        a_i, b_i = (int(rng.integers(n_carry)) for _ in range(2))
+        wh = (_LOOP_CMP[int(rng.integers(len(_LOOP_CMP)))],
+              int(rng.integers(n_carry))) if rng.random() < 0.4 else None
+        specs.append((op, a_i, b_i, wh))
+
+    def step(c):
+        new = []
+        for op, a_i, b_i, wh in specs:
+            a, b = c[a_i], c[b_i]
+            v = {"add": lambda: a + b, "sub": lambda: a - b,
+                 "mul": lambda: a * b, "and": lambda: a & b,
+                 "or": lambda: a | b, "xor": lambda: a ^ b,
+                 "max": lambda: jnp.maximum(a, b),
+                 "min": lambda: jnp.minimum(a, b)}[op]()
+            if wh is not None:
+                cmp, w_i = wh
+                w = c[w_i]
+                cond = {"gt": a > w, "ge": a >= w, "lt": a < w,
+                        "le": a <= w, "eq": a == w, "ne": a != w}[cmp]
+                v = jnp.where(cond, v, b)
+            new.append(v)
+        return tuple(new)
+
+    def fn(*args):
+        init = tuple(args[j % n_args] for j in range(n_carry))
+        if static:
+            r = lax.fori_loop(0, T, lambda i, c: step(c), init)
+        else:       # data-dependent bounded trip count (int32 only)
+            n = jnp.clip(args[0], 0, T)
+            r = lax.fori_loop(0, n, lambda i, c: step(c), init)
+        return r[0]
+
+    return fn, n_args, dtype, static
+
+
+def _loop_args(rng, dtype, n_args):
+    if dtype == np.float32:
+        return [np.float32(np.round(rng.uniform(-2, 2), 3))
+                for _ in range(n_args)]
+    if dtype == np.uint32:
+        return [np.uint32(rng.integers(0, 40)) for _ in range(n_args)]
+    return [np.int32(rng.integers(-20, 20)) for _ in range(n_args)]
+
+
+@pytest.mark.parametrize("seed", range(N_LOOPS))
+def test_fuzz_random_loop_programs(seed):
+    fn, n_args, dtype, static = random_loop_case(seed)
+    prog = trace(fn, *([dtype] * n_args), name=f"loop{seed}")
+    assert prog.has_loops and prog.is_cyclic()
+    rng = np.random.default_rng(8000 + seed)
+    feeds_list = []
+    with np.errstate(all="ignore"):
+        for _ in range(N_FEEDS):
+            args = _loop_args(rng, dtype, n_args)
+            feeds = prog.make_feeds(*[[a] for a in args])
+            want = np.asarray(fn(*args), dtype)   # plain jax execution
+            r = run_reference(prog, feeds, dtype=dtype, max_cycles=CAP)
+            assert r.cycles < CAP, (seed, "must quiesce under the cap")
+            assert r.counts[prog.out_arc] == 1, (seed, "one initiation")
+            assert np.asarray(r.outputs[prog.out_arc]).tobytes() == \
+                want.tobytes(), (seed, args, r.outputs, want)
+            feeds_list.append(feeds)
+    # and the full executor matrix agrees bit-for-bit
+    differential_case(prog, feeds_list, _ks(seed), f"loop{seed}",
+                      dtype=dtype)
 
 
 # ---------------------------------------------------------------------------
