@@ -15,10 +15,19 @@ Two servers, same engine, same arrival order:
                 per-slot quiescence detection + mid-flight refill from
                 the queue, free slots clock-gated out of the fabric.
 
+Each continuous row also reports serving-quality metrics (DESIGN.md
+§11): per-request wall-latency p50/p99 (submit -> result, measured on
+an instrumented step loop) and the queue's high-water mark.
+``fault_rows()`` re-runs a subset through a seeded
+:class:`~repro.serve.faults.FaultPlan` ("_faulted" rows) so the
+overhead of the retry/watchdog/poison machinery is tracked next to the
+clean numbers.
+
 ``main()`` sweeps every library bench x {xla, pallas} and writes
 BENCH_serve.json (committed, so the requests/s trajectory is tracked
-across PRs).  ``--quick`` runs 2 benches at tiny K/B with reps=1 as a
-CI smoke step.
+across PRs).  ``--quick`` runs 3 benches at tiny K/B with reps=1 as a
+CI smoke step — it writes the same JSON schema so CI artifacts carry
+the latency percentiles too.
 
 CSV: name,us_per_call,derived  (one line per bench/backend/mode).
 """
@@ -33,6 +42,7 @@ import numpy as np
 
 from repro.core import library
 from repro.serve.dataflow_server import DataflowServer, cached_engine
+from repro.serve.faults import FaultPlan
 
 
 def workload(name: str, bench, R: int, long_len: int = 200,
@@ -55,6 +65,30 @@ def _time(fn, reps: int):
         fn()
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
+
+
+def _latency_probe(mk_server, feeds):
+    """One instrumented serve of ``feeds``: submit everything, then
+    step (never drain) so each result's arrival is timestamped.
+    Returns (results, per-request wall latencies in seconds, server)."""
+    srv = mk_server()
+    t0 = time.perf_counter()
+    submit_t = {}
+    for f in feeds:
+        uid = srv.submit(f)
+        submit_t[uid] = time.perf_counter()
+    res, lat = [], []
+    while srv.pending:
+        for r in srv.step():
+            now = time.perf_counter()
+            res.append(r)
+            lat.append(now - submit_t.get(r.uid, t0))
+    return res, lat, srv
+
+
+def _pcts(lat):
+    return (round(float(np.percentile(lat, 50)) * 1e3, 3),
+            round(float(np.percentile(lat, 99)) * 1e3, 3))
 
 
 def serve_rows(benches=None, backends=("xla", "pallas"), R: int = 16,
@@ -100,6 +134,13 @@ def serve_rows(benches=None, backends=("xla", "pallas"), R: int = 16,
             waits = [r.metrics.queue_wait_blocks for r in cont_res]
             wave_s = _time(run_wave, reps)
             cont_s = _time(run_cont, reps)
+            # per-request wall latency, measured on a separate
+            # instrumented pass (the timed passes above stay untouched)
+            _, lat, probe_srv = _latency_probe(
+                lambda: DataflowServer(bench.graph, slots=slots,
+                                       block_cycles=block, engine=eng),
+                feeds)
+            p50, p99 = _pcts(lat)
             out.append(dict(
                 name=name, backend=backend, R=R, slots=slots, K=block,
                 long_len=long_len,
@@ -108,47 +149,105 @@ def serve_rows(benches=None, backends=("xla", "pallas"), R: int = 16,
                 cont_req_per_s=round(R / cont_s, 1),
                 speedup=round(wave_s / cont_s, 2),
                 wave_dispatches=wave_disp, cont_dispatches=cont_disp,
+                cont_p50_ms=p50, cont_p99_ms=p99,
+                max_queue_depth=probe_srv.max_queue_depth,
                 mean_queue_wait_blocks=round(float(np.mean(waits)), 2),
                 mean_residency_cycles=round(float(np.mean(
                     [r.metrics.residency_cycles for r in cont_res])), 1)))
     return out
 
 
+def fault_rows(benches=("vector_sum",), backend="xla", R: int = 16,
+               slots: int = 4, block: int = 8,
+               long_len: int = 64, every: int = 4):
+    """"_faulted" rows: the same mixed-length trace served through a
+    seeded FaultPlan (transient dispatch failures + wedges + poisoned
+    feeds) — measuring what the fault-tolerance machinery costs and
+    recording the disposition mix.  Every request must still be
+    answered; the row asserts conservation before it is emitted."""
+    out = []
+    for name in benches:
+        bench = library.BENCHES[name]()
+        if np.dtype(bench.dtype) != np.int32:
+            continue
+        feeds = workload(name, bench, R, long_len=long_len, every=every)
+
+        def mk():
+            return DataflowServer(
+                bench.graph, slots=slots, block_cycles=block,
+                backend=backend, max_retries=3, wedge_timeout_blocks=4,
+                faults=FaultPlan(seed=11, dispatch_fail_rate=0.05,
+                                 transient_attempts=1,
+                                 wedge_rate=0.1, poison_rate=0.1))
+
+        _latency_probe(mk, feeds)          # warmup (compiles)
+        t0 = time.perf_counter()
+        res, lat, srv = _latency_probe(mk, feeds)
+        total_s = time.perf_counter() - t0
+        assert len(res) == R, "every request must be answered"
+        p50, p99 = _pcts(lat)
+        statuses: dict[str, int] = {}
+        for r in res:
+            statuses[r.status] = statuses.get(r.status, 0) + 1
+        out.append(dict(
+            name=f"{name}_faulted", backend=backend, R=R, slots=slots,
+            K=block, long_len=long_len,
+            cont_s=round(total_s, 4),
+            cont_req_per_s=round(R / total_s, 1),
+            cont_p50_ms=p50, cont_p99_ms=p99,
+            max_queue_depth=srv.max_queue_depth,
+            statuses=statuses, retries=len(
+                [e for e in srv.events if e["kind"] == "dispatch-retry"])))
+    return out
+
+
 def print_csv(recs):
     for r in recs:
         base = f"serve_{r['name']}_{r['backend']}"
-        print(f"{base}_wave,{r['wave_s'] * 1e6:.0f},"
-              f"req_per_s={r['wave_req_per_s']};"
-              f"dispatches={r['wave_dispatches']}")
+        if "wave_s" in r:
+            print(f"{base}_wave,{r['wave_s'] * 1e6:.0f},"
+                  f"req_per_s={r['wave_req_per_s']};"
+                  f"dispatches={r['wave_dispatches']}")
+        tail = (f"speedup={r['speedup']};"
+                f"wait_blocks={r['mean_queue_wait_blocks']}"
+                if "speedup" in r else
+                f"statuses={r['statuses']};retries={r['retries']}")
         print(f"{base}_cont,{r['cont_s'] * 1e6:.0f},"
               f"req_per_s={r['cont_req_per_s']};"
-              f"dispatches={r['cont_dispatches']};"
-              f"speedup={r['speedup']};"
-              f"wait_blocks={r['mean_queue_wait_blocks']}")
+              f"p50_ms={r['cont_p50_ms']};p99_ms={r['cont_p99_ms']};"
+              f"max_queue={r['max_queue_depth']};" + tail)
 
 
-def main(path: str | None = None) -> list[dict]:
-    recs = serve_rows()
+def _write(recs, path: str | None) -> None:
     path = path or os.path.join(os.path.dirname(__file__), "..",
                                 "BENCH_serve.json")
     with open(path, "w") as f:
         json.dump(recs, f, indent=1)
+
+
+def main(path: str | None = None) -> list[dict]:
+    recs = serve_rows() + fault_rows()
+    _write(recs, path)
     print_csv(recs)
     for backend in ("xla", "pallas"):
-        rows = [r for r in recs if r["backend"] == backend]
+        rows = [r for r in recs if r["backend"] == backend
+                and "speedup" in r]
         wins = [r["name"] for r in rows if r["speedup"] > 1.0]
         print(f"serve_summary_{backend},0,continuous_beats_wave_on="
               f"{len(wins)}/{len(rows)}:{'+'.join(wins)}")
     return recs
 
 
-def quick() -> list[dict]:
-    """CI smoke: 2 benches, tiny K/B, no JSON (the committed file is a
-    full-run artifact; quick exists to exercise the code paths, not to
-    reproduce the speedups)."""
+def quick(path: str | None = None) -> list[dict]:
+    """CI smoke: 3 benches at tiny K/B, reps=1 — exercises the code
+    paths (incl. the faulted row) and writes the full JSON schema, p50/
+    p99 latency and queue high-water included, without reproducing the
+    committed full-run speedups."""
     recs = serve_rows(benches=("vector_sum", "fibonacci", "gcd"),
                       backends=("xla", "pallas"), R=6, slots=2, block=4,
                       reps=1, long_len=8, every=3)
+    recs += fault_rows(R=6, slots=2, block=4, long_len=8)
+    _write(recs, path)
     print_csv(recs)
     return recs
 

@@ -260,6 +260,14 @@ class SlotState:
       quiesced[B]   latest block had an idle tail (idle is absorbing,
                     so the resident request is finished)
       dispatches[B] block dispatches the resident request has ridden
+      cap[B]        per-slot cycle cap (engine max_cycles unless the
+                    admission overrode it via ``reset_slots(caps=)``) —
+                    the budget a scheduler shortens blocks against and
+                    ``harvest`` clamps the cycle count to
+      stalled[B]    consecutive blocks with zero progress (no feed, no
+                    firing, no drain) while the slot stayed active —
+                    the progress counter a wedged-slot watchdog reads;
+                    reset to 0 by any progress and on (re)admission
     """
     fv: object
     fl: object
@@ -274,6 +282,8 @@ class SlotState:
     fired: np.ndarray
     quiesced: np.ndarray
     dispatches: np.ndarray
+    cap: np.ndarray = None
+    stalled: np.ndarray = None
     active_dev: object = None   # device mirror of `active` (refreshed on
                                 # admission/harvest, not per block)
 
@@ -524,6 +534,7 @@ class DataflowEngine:
             out_count=jnp.zeros((B, n_out), jnp.int32),
             active=np.zeros((B,), np.int32), base=z64(), last=z64(),
             fired=z64(), quiesced=np.zeros((B,), bool), dispatches=z64(),
+            cap=np.full((B,), self.max_cycles, np.int64), stalled=z64(),
             active_dev=jnp.zeros((B,), jnp.int32))
 
     def _slot_step(self, n_cycles: int):
@@ -541,11 +552,16 @@ class DataflowEngine:
         return step
 
     def reset_slots(self, state: SlotState, slot_ids,
-                    new_feeds) -> SlotState:
+                    new_feeds, caps=None) -> SlotState:
         """Admit one request per slot id: fresh arc registers + the new
         feed stream, in one fused dispatch for the whole round.  Slots
         must be free (never-used or harvested); everything else keeps
         its state untouched.
+
+        caps: optional per-admission cycle caps (one entry per slot id;
+        ``None`` entries fall back to the engine's ``max_cycles``) — a
+        request-level budget the scheduler enforces by shortening
+        blocks and ``harvest`` clamps cycle accounting to.
 
         MOVE semantics: the input state's device buffers are donated to
         the fused reset dispatch, so ``state`` (and any older SlotState
@@ -588,16 +604,28 @@ class DataflowEngine:
             state.out_last, state.out_count, jnp.asarray(mask),
             jnp.asarray(fv_rows), jnp.asarray(fl_rows),
             jnp.asarray(full0), jnp.asarray(val0))
+        if caps is None:
+            caps = [None] * len(slot_ids)
+        if len(caps) != len(slot_ids):
+            raise ValueError(f"{len(slot_ids)} slot ids but "
+                             f"{len(caps)} caps")
         active = state.active.copy()
         for host in (base := state.base.copy(), last := state.last.copy(),
                      fired := state.fired.copy(),
-                     disp := state.dispatches.copy()):
+                     disp := state.dispatches.copy(),
+                     stalled := state.stalled.copy()):
             host[slot_ids] = 0
+        cap = state.cap.copy()
+        for b, c in zip(slot_ids, caps):
+            if c is not None and int(c) < 1:
+                raise ValueError(f"slot {b}: cap must be >= 1, got {c}")
+            cap[b] = self.max_cycles if c is None else int(c)
         quiesced = state.quiesced.copy()
         active[slot_ids] = 1
         quiesced[slot_ids] = False
         return SlotState(fv_, fl_, full, val, ptr, out_last, out_count,
                          active, base, last, fired, quiesced, disp,
+                         cap=cap, stalled=stalled,
                          active_dev=jnp.asarray(active))
 
     def step_block(self, state: SlotState,
@@ -627,8 +655,17 @@ class DataflowEngine:
         base = state.base + np.where(state.active > 0, nb, 0)
         quiesced = np.where(state.active > 0, lp < nb, state.quiesced)
         disp = state.dispatches + (state.active > 0)
+        # progress counter: an active slot whose whole block was idle
+        # stalls by one more block; any progress resets it.  A healthy
+        # idle slot is harvested as quiesced the same heartbeat, so a
+        # *growing* stall count means the quiescence signal is being
+        # withheld — the watchdog's trigger (DESIGN.md §11).
+        stalled = np.where(state.active > 0,
+                           np.where(lp > 0, 0, state.stalled + 1),
+                           state.stalled)
         return SlotState(state.fv, state.fl, *dev, state.active.copy(),
                          base, last, fired, quiesced, disp,
+                         cap=state.cap, stalled=stalled,
                          active_dev=active_dev)
 
     def harvest(self, state: SlotState, slot_ids
@@ -636,8 +673,8 @@ class DataflowEngine:
         """Extract the resident requests' EngineResults from the given
         (active) slots and free them.  Results follow the same
         accounting as run(): cycles = last progress cycle + 1 trailing
-        idle cycle, capped at max_cycles; dispatches = blocks the
-        request rode."""
+        idle cycle, capped at the slot's cycle cap (per-request if the
+        admission set one); dispatches = blocks the request rode."""
         self._check_slot_api()
         slot_ids = list(slot_ids)
         idle = [b for b in slot_ids if not state.active[b]]
@@ -647,7 +684,7 @@ class DataflowEngine:
                                               state.out_count))
         results = [self._result_from_state(
             out_last[b], out_count[b],
-            int(min(state.last[b] + 1, self.max_cycles)),
+            int(min(state.last[b] + 1, state.cap[b])),
             int(state.fired[b]), int(state.dispatches[b]))
             for b in slot_ids]
         active = state.active.copy()

@@ -42,21 +42,55 @@ one loop initiation (:meth:`DataflowServer.submit_args`); the slot's
 idle-tail detection IS the loop-termination signal (the exit BRANCH
 drains the result and the cycle goes quiet), short loops harvest and
 refill while long ones keep iterating, and a divergent loop is
-force-harvested at the engine's ``max_cycles`` cap with
-``metrics.truncated`` set instead of wedging its slot.
+force-harvested at its cycle cap with ``metrics.truncated`` set
+instead of wedging its slot.
+
+Fault tolerance (PR 6, DESIGN.md §11): the server is hardened for a
+hostile multi-tenant environment, the setting Weisensee & Nathan's
+self-reconfigurable platform targets (PAPERS.md, cs/0411075) — shared
+reconfigurable hardware must survive misbehaving workloads:
+
+* **bounded admission** — ``max_queue`` + ``policy`` ("reject" |
+  "block" | "drop-oldest") with round-robin fairness across
+  ``Request.tenant`` keys (:mod:`repro.serve.admission`);
+* **deadlines and budgets** — ``Request.deadline_blocks`` expires a
+  request (queued or resident) like truncation;
+  ``Request.max_cycles`` overrides the engine cap per slot;
+* **the stall watchdog** — a slot whose progress counters freeze for
+  ``wedge_timeout_blocks`` without quiescing is force-harvested with
+  ``metrics.wedged``;
+* **error isolation and degradation** — dispatch failures retry with
+  exponential backoff; persistent failures tear down only the failing
+  backend: residents are re-queued (front of their tenant bucket) and
+  restarted on the next backend of the ``pallas → xla → reference``
+  chain, the terminal reference mode executing requests one-at-a-time
+  on the host with per-request ``Result(error=...)`` capture.  The
+  server *always* answers: ``step()``/``drain()`` never raise a
+  workload-induced error (property-tested in
+  tests/test_server_robustness.py under a seeded
+  :class:`~repro.serve.faults.FaultPlan`), and a faulty slot is torn
+  down without perturbing co-resident circuits — unfaulted requests
+  stay bit-identical to solo runs (Li et al.'s per-circuit isolation).
 """
 from __future__ import annotations
 
 import collections
+import dataclasses
 import hashlib
+import logging
+import time
 from typing import Iterable, Mapping
 
 import numpy as np
 
 from repro.core import asm
-from repro.core.engine import BACKENDS, DataflowEngine
+from repro.core.engine import (BACKENDS, DataflowEngine, run_reference)
 from repro.core.graph import Graph
+from repro.serve.admission import (POLICIES, DroppedError, FairQueue,
+                                   QueueFullError, Rejected)
 from repro.serve.types import Request, RequestMetrics, Result
+
+log = logging.getLogger(__name__)
 
 # ---------------------------------------------------------------------------
 # Compiled-plan cache: many requests, one fabric
@@ -66,7 +100,7 @@ _ENGINE_CACHE: "collections.OrderedDict[tuple, DataflowEngine]" = \
 _ENGINE_CACHE_MAX = 64      # LRU bound: a long-running service sees a
                             # finite fabric vocabulary; evicted engines
                             # stay alive wherever still referenced
-CACHE_STATS = {"hits": 0, "misses": 0}
+CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def graph_signature(graph: Graph) -> str:
@@ -108,6 +142,7 @@ def cached_engine(graph: Graph, *, backend: str = "xla",
         _ENGINE_CACHE[key] = eng
         while len(_ENGINE_CACHE) > _ENGINE_CACHE_MAX:
             _ENGINE_CACHE.popitem(last=False)
+            CACHE_STATS["evictions"] += 1
     else:
         CACHE_STATS["hits"] += 1
         _ENGINE_CACHE.move_to_end(key)
@@ -117,6 +152,13 @@ def cached_engine(graph: Graph, *, backend: str = "xla",
 def clear_engine_cache() -> None:
     _ENGINE_CACHE.clear()
     CACHE_STATS["hits"] = CACHE_STATS["misses"] = 0
+    CACHE_STATS["evictions"] = 0
+
+
+# Degradation order: each backend's next-best survivor.  "reference" is
+# terminal — the pure-host oracle has no device dispatch to fail, so a
+# server can always still answer from there.
+FALLBACK_CHAIN = ("pallas", "xla", "reference")
 
 
 # ---------------------------------------------------------------------------
@@ -128,26 +170,69 @@ class DataflowServer:
     Usage::
 
         srv = DataflowServer(graph, slots=8, block_cycles=16,
-                             backend="pallas")
-        srv.submit(feeds_a)            # returns uid
-        srv.submit(Request(uid=7, feeds=feeds_b))
+                             backend="pallas",
+                             max_queue=64, policy="reject")
+        srv.submit(feeds_a)            # returns uid (or typed Rejected)
+        srv.submit(Request(uid=7, feeds=feeds_b, deadline_blocks=50))
         done = srv.step()              # one K-cycle block; may finish 0+
         rest = srv.drain()             # run until queue + slots empty
 
-    ``step()`` is the scheduler heartbeat: admit from the queue into
-    free slots, advance every active slot by one K-cycle block (one
-    device dispatch), harvest slots whose block had an idle tail.
-    Requests that hit the engine's ``max_cycles`` safety cap are
-    force-harvested (truncated) rather than wedging their slot.
+    ``step()`` is the scheduler heartbeat: expire deadline-blown
+    requests, force-harvest budget-exhausted and wedged slots, admit
+    from the queue into free slots (round-robin across tenants),
+    advance every active slot by one K-cycle block (one device
+    dispatch, retried with exponential backoff on transient failures),
+    harvest slots whose block had an idle tail.  A persistent dispatch
+    or compile failure degrades the server down the
+    ``pallas → xla → reference`` chain instead of raising — every
+    submitted request receives exactly one :class:`Result` (value,
+    truncated, expired, wedged, or typed error).
     """
 
     def __init__(self, graph: Graph, slots: int = 8,
                  block_cycles: int = 16, backend: str = "xla",
                  max_cycles: int = 100_000,
                  engine: DataflowEngine | None = None,
-                 optimize: bool = False):
+                 optimize: bool = False,
+                 max_queue: int | None = None, policy: str = "reject",
+                 wedge_timeout_blocks: int = 32,
+                 max_retries: int = 3, retry_backoff_s: float = 0.0,
+                 faults=None):
         if slots < 1:
             raise ValueError("slots must be >= 1")
+        if policy not in POLICIES:
+            raise ValueError(f"policy {policy!r} not in {POLICIES}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None: unbounded)")
+        if wedge_timeout_blocks < 1:
+            raise ValueError("wedge_timeout_blocks must be >= 1")
+        self.graph = graph
+        self.slots = slots
+        self.max_cycles = int(max_cycles)
+        self.max_queue = max_queue
+        self.policy = policy
+        self.wedge_timeout_blocks = int(wedge_timeout_blocks)
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.faults = faults
+        self._block_cycles = int(block_cycles)
+        self._optimize = bool(optimize)
+        self._input_arcs = tuple(graph.input_arcs())
+        self.queue = FairQueue()
+        self.block = 0            # server block clock (dispatches issued)
+        self.admission_rounds = 0  # fused reset dispatches issued
+        self.max_queue_depth = 0   # high-water mark of the queue
+        self.events: list[dict] = []   # degradations/retries/drops log
+        self._queued_at: dict[int, int] = {}     # uid -> block at submit
+        self._resident: dict[int, tuple[Request, int]] = {}  # slot -> (req, admitted)
+        self._retries: dict[int, int] = {}       # uid -> dispatch retries
+        self._degraded_uids: set[int] = set()    # restarted by degradation
+        self._done: list[Result] = []  # results finished out-of-band
+        #                                (drops, blocking-submit pumps)
+        self._auto_uid = 0
+        self._reference = False
+        self.engine: DataflowEngine | None = None
+        self.state = None
         if engine is not None:
             # an explicit engine wins over backend/block_cycles/max_cycles
             # (block size is a perf knob, never a semantics one), but it
@@ -157,22 +242,57 @@ class DataflowServer:
                 raise ValueError(
                     "engine= was compiled for a different fabric "
                     f"({engine.graph.name!r}, not {graph.name!r})")
+            self._primary_backend = engine.backend
             self.engine = engine
+            self.max_cycles = engine.max_cycles
         else:
-            # optimize=True shares the opcode-class-specialized plan
-            # (DESIGN.md §8) across every slot; it joins the cache key
-            # because specialized and dense plans compile differently
-            self.engine = cached_engine(
-                graph, backend=backend, block_cycles=block_cycles,
-                max_cycles=max_cycles, optimize=optimize)
-        self.state = self.engine.init_state(slots)
-        self.slots = slots
-        self.queue: collections.deque[Request] = collections.deque()
-        self.block = 0            # server block clock (dispatches issued)
-        self.admission_rounds = 0  # fused reset dispatches issued
-        self._queued_at: dict[int, int] = {}     # uid -> block at submit
-        self._resident: dict[int, tuple[Request, int]] = {}  # slot -> (req, admitted)
-        self._auto_uid = 0
+            if backend not in BACKENDS:
+                raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+            self._primary_backend = backend
+            # construction-time fallback: a backend whose engine cannot
+            # be built (fault-injected or real) degrades immediately —
+            # the server comes up answering, just slower
+            for be in self._chain_from(backend):
+                if be == "reference":
+                    self._enter_reference(None)
+                    break
+                try:
+                    if self.faults is not None:
+                        self.faults.check_compile(be)
+                    # optimize=True shares the opcode-class-specialized
+                    # plan (DESIGN.md §8) across every slot; it joins the
+                    # cache key because specialized and dense plans
+                    # compile differently
+                    self.engine = cached_engine(
+                        graph, backend=be, block_cycles=block_cycles,
+                        max_cycles=max_cycles, optimize=optimize)
+                    break
+                except Exception as e:
+                    self._log_event("compile-degrade", backend=be,
+                                    error=repr(e))
+        if self.engine is not None and not self._reference:
+            self.state = self.engine.init_state(slots)
+
+    # -- construction helpers -------------------------------------------
+    def _chain_from(self, backend: str) -> tuple[str, ...]:
+        if backend in FALLBACK_CHAIN:
+            return FALLBACK_CHAIN[FALLBACK_CHAIN.index(backend):]
+        return (backend, *FALLBACK_CHAIN)
+
+    def _log_event(self, kind: str, **kw) -> None:
+        ev = dict(kind=kind, block=self.block, **kw)
+        self.events.append(ev)
+        log.warning("dataflow-server %s: %s", kind, kw)
+
+    @property
+    def backend(self) -> str:
+        """Backend currently serving (may differ from the requested one
+        after degradation)."""
+        return "reference" if self._reference else self.engine.backend
+
+    @property
+    def degraded(self) -> bool:
+        return self.backend != self._primary_backend
 
     @classmethod
     def for_fn(cls, fn, *avals, const_args=None, name=None,
@@ -203,8 +323,8 @@ class DataflowServer:
         is the natural request shape for loop fabrics (DESIGN.md §10):
         one initiation per request, data-dependent trip count inside
         the slot, per-slot quiescence detection ending it — requests
-        that never quiesce are force-harvested at the engine's
-        ``max_cycles`` cap with ``metrics.truncated`` set."""
+        that never quiesce are force-harvested at their cycle cap with
+        ``metrics.truncated`` set."""
         if not hasattr(self, "make_feeds"):
             raise AttributeError(
                 "submit_args needs a server built by for_fn (only "
@@ -212,10 +332,12 @@ class DataflowServer:
         return self.submit(self.make_feeds(*args))
 
     # -- admission ------------------------------------------------------
-    def submit(self, request) -> int:
+    def submit(self, request):
         """Enqueue a request (a :class:`Request` or a bare feeds dict);
-        returns its uid.  uids must be unique among in-flight requests —
-        auto-assigned ones skip any the caller has taken."""
+        returns its uid, or a typed :class:`Rejected` when the queue is
+        at ``max_queue`` under ``policy="reject"``.  uids must be
+        unique among in-flight requests — auto-assigned ones skip any
+        the caller has taken."""
         if isinstance(request, Mapping) or request is None:
             while self._auto_uid + 1 in self._queued_at:
                 self._auto_uid += 1
@@ -231,63 +353,288 @@ class DataflowServer:
             raise ValueError(f"uid {request.uid} is already in flight")
         # fail fast on feeds the fabric cannot take: admission batches
         # several requests into one fused reset, so a bad request must
-        # be rejected here, not poison its co-batched neighbours there
-        unknown = set(request.feeds) - set(self.engine.p["input_arcs"])
+        # be rejected here, not poison its fused reset batch.  Unknown
+        # arcs have nowhere to go; MISSING arcs would strand the fabric
+        # mid-computation waiting on tokens that never arrive (the slot
+        # then burns its whole cycle budget before truncating).
+        unknown = set(request.feeds) - set(self._input_arcs)
         if unknown:
             raise ValueError(f"request {request.uid}: feeds for "
                              f"non-input arcs: {sorted(unknown)}")
-        self.queue.append(request)
+        missing = [a for a in self._input_arcs if a not in request.feeds]
+        if missing:
+            raise ValueError(
+                f"request {request.uid}: missing feeds for input arcs "
+                f"{missing} — every input arc needs a stream")
+        # bounded admission (DESIGN.md §11)
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            if self.policy == "reject":
+                return Rejected(uid=request.uid,
+                                reason=f"queue full ({self.max_queue})",
+                                queue_depth=len(self.queue),
+                                tenant=request.tenant)
+            if self.policy == "drop-oldest":
+                victim = self.queue.drop_oldest()
+                queued = self._queued_at.pop(victim.uid)
+                self._retries.pop(victim.uid, None)
+                self._log_event("drop-oldest", uid=victim.uid,
+                                tenant=victim.tenant)
+                self._done.append(Result(
+                    uid=victim.uid,
+                    error=DroppedError(
+                        f"request {victim.uid} dropped by admission "
+                        f"(queue full at {self.max_queue}, "
+                        f"policy=drop-oldest)"),
+                    metrics=self._queue_only_metrics(queued)))
+            else:       # "block": the submitting host pumps heartbeats
+                guard = 0
+                while len(self.queue) >= self.max_queue:
+                    self._done.extend(self._step_inner())
+                    guard += 1
+                    if guard > 1_000_000:
+                        raise QueueFullError(
+                            "blocking submit pumped 1e6 heartbeats "
+                            "without a queue slot freeing")
+        if self.faults is not None and request.feeds:
+            poisoned = self.faults.poison(request.feeds, request.uid,
+                                          np.int32)
+            if poisoned is not request.feeds:
+                self._log_event("poison", uid=request.uid)
+                request = dataclasses.replace(request, feeds=poisoned)
+        self.queue.push(request)
         self._queued_at[request.uid] = self.block
+        self.max_queue_depth = max(self.max_queue_depth, len(self.queue))
         return request.uid
+
+    def _queue_only_metrics(self, queued: int,
+                            expired: bool = False) -> RequestMetrics:
+        """Metrics for a request that never reached a slot (dropped or
+        expired while queued): slot == -1, no residency."""
+        return RequestMetrics(
+            slot=-1, queued_block=queued, admitted_block=-1,
+            finished_block=self.block,
+            queue_wait_blocks=self.block - queued,
+            residency_blocks=0, residency_cycles=0, tokens_out=0,
+            expired=expired, backend="",
+            degraded=self.degraded)
 
     def _admit(self) -> None:
         free = self.state.free_slots()
         batch: list[tuple[int, Request]] = []
         while free and self.queue:
-            batch.append((free.pop(0), self.queue.popleft()))
+            batch.append((free.pop(0), self.queue.pop()))
         if batch:
             self.state = self.engine.reset_slots(
                 self.state, [b for b, _ in batch],
-                [r.feeds for _, r in batch])
+                [r.feeds for _, r in batch],
+                caps=[r.max_cycles for _, r in batch])
             self.admission_rounds += 1
             for b, r in batch:
                 self._resident[b] = (r, self.block)
 
     # -- heartbeat ------------------------------------------------------
     def step(self) -> list[Result]:
-        """Evict cap-exhausted requests, admit, advance one block,
-        harvest.  Returns the requests that finished this block
-        (possibly none).
+        """One scheduler heartbeat; returns the requests that finished
+        (possibly none) — including any completed out-of-band since the
+        last call (queue drops, blocking-submit pumps).
 
-        A heartbeat's block never lets any slot cross the engine's
-        ``max_cycles`` cap: it is shortened to the smallest remaining
-        per-slot budget when one nears the cap (block partitioning does
-        not change cycle semantics — property-tested across K), so even
-        a truncated request simulates exactly ``max_cycles`` cycles,
-        bit-identical to a solo ``run``."""
-        cap = self.engine.max_cycles
-        results = self._harvest_slots(
+        A heartbeat's block never lets any slot cross its cycle cap
+        (engine ``max_cycles`` or ``Request.max_cycles``): it is
+        shortened to the smallest remaining per-slot budget when one
+        nears its cap (block partitioning does not change cycle
+        semantics — property-tested across K), so even a truncated
+        request simulates exactly its cap, bit-identical to a solo
+        ``run`` under the same cap."""
+        done, self._done = self._done, []
+        return done + self._step_inner()
+
+    def _step_inner(self) -> list[Result]:
+        results = self._expire_queued()
+        if self._reference:
+            return results + self._step_reference()
+        # 1. deadline / budget / watchdog exits on resident slots
+        #    (precedence: expired > truncated > wedged)
+        results += self._harvest_slots(
             [b for b in sorted(self._resident)
-             if not self.state.quiesced[b] and self.state.base[b] >= cap],
-            truncated=True)
+             if not self.state.quiesced[b] and self._deadline_blown(b)],
+            kind="expired")
+        results += self._harvest_slots(
+            [b for b in sorted(self._resident)
+             if not self.state.quiesced[b]
+             and self.state.base[b] >= self.state.cap[b]],
+            kind="truncated")
+        results += self._harvest_slots(
+            [b for b in sorted(self._resident)
+             if int(self.state.stalled[b]) >= self.wedge_timeout_blocks],
+            kind="wedged")
+        # 2. admission (round-robin across tenants)
         self._admit()
         if not self._resident:
             return results
-        self.state = self.engine.step_block(self.state, n_cycles=min(
+        # 3. advance one block — with retry, then degradation
+        n_cycles = min(
             self.engine.block_cycles,
-            min(cap - int(self.state.base[b]) for b in self._resident)))
+            min(int(self.state.cap[b]) - int(self.state.base[b])
+                for b in self._resident))
+        try:
+            self.state = self._dispatch_block(n_cycles)
+        except Exception as e:      # retries exhausted: degrade, requeue
+            self._degrade(e)
+            return results
         self.block += 1
-        return results + self._harvest_slots(self.state.quiesced_slots())
+        # 4. harvest quiesced slots; a fault-wedged request's quiescence
+        #    signal is suppressed (the slot stalls until the watchdog)
+        done = self.state.quiesced_slots()
+        if self.faults is not None:
+            wedged = [b for b in done
+                      if self.faults.wedge(self._resident[b][0].uid)]
+            for b in wedged:
+                self.state.quiesced[b] = False
+            done = [b for b in done if b not in wedged]
+        return results + self._harvest_slots(done)
+
+    def _deadline_blown(self, b: int) -> bool:
+        req, _ = self._resident[b]
+        return (req.deadline_blocks is not None
+                and self.block - self._queued_at[req.uid]
+                >= req.deadline_blocks)
+
+    def _expire_queued(self) -> list[Result]:
+        """Deadline sweep over the queue: requests whose budget elapsed
+        before admission are answered as expired without ever touching
+        a slot."""
+        expired = self.queue.remove_if(
+            lambda r: r.deadline_blocks is not None
+            and self.block - self._queued_at[r.uid] >= r.deadline_blocks)
+        results = []
+        for r in expired:
+            queued = self._queued_at.pop(r.uid)
+            self._retries.pop(r.uid, None)
+            results.append(Result(
+                uid=r.uid,
+                metrics=self._queue_only_metrics(queued, expired=True)))
+        return results
+
+    def _dispatch_block(self, n_cycles: int):
+        """One device dispatch, retried with exponential backoff on
+        transient failures; raises once ``max_retries`` is exhausted
+        (the caller degrades the backend)."""
+        attempt = 0
+        while True:
+            try:
+                if self.faults is not None:
+                    err = self.faults.dispatch_error(
+                        self.engine.backend, self.block, attempt)
+                    if err is not None:
+                        raise err
+                return self.engine.step_block(self.state,
+                                              n_cycles=n_cycles)
+            except Exception as e:
+                attempt += 1
+                if attempt > self.max_retries:
+                    raise
+                for req, _ in self._resident.values():
+                    self._retries[req.uid] = \
+                        self._retries.get(req.uid, 0) + 1
+                self._log_event("dispatch-retry", attempt=attempt,
+                                backend=self.engine.backend,
+                                error=repr(e))
+                if self.retry_backoff_s > 0.0:
+                    time.sleep(self.retry_backoff_s * 2 ** (attempt - 1))
+
+    def _degrade(self, err: Exception) -> None:
+        """Tear down the failing backend: re-queue every resident
+        request (front of its tenant bucket, original uid and deadline
+        intact — execution restarts from the feeds, which is
+        deterministic) and bring up the next backend in the chain."""
+        failed = self.engine.backend
+        victims = [self._resident[b][0] for b in sorted(self._resident)]
+        self._resident.clear()
+        for req in reversed(victims):
+            self.queue.push_front(req)
+            self._degraded_uids.add(req.uid)
+        self.max_queue_depth = max(self.max_queue_depth, len(self.queue))
+        self._log_event("degrade", from_backend=failed, error=repr(err),
+                        requeued=[r.uid for r in victims])
+        chain = self._chain_from(failed)
+        for be in chain[1:] if chain[0] == failed else chain:
+            if be == "reference":
+                self._enter_reference(err)
+                return
+            try:
+                if self.faults is not None:
+                    self.faults.check_compile(be)
+                self.engine = cached_engine(
+                    self.graph, backend=be,
+                    block_cycles=self._block_cycles,
+                    max_cycles=self.max_cycles, optimize=self._optimize)
+                self.state = self.engine.init_state(self.slots)
+                self._log_event("degrade-to", backend=be)
+                return
+            except Exception as e:
+                self._log_event("compile-degrade", backend=be,
+                                error=repr(e))
+        self._enter_reference(err)      # unreachable fallback of fallbacks
+
+    def _enter_reference(self, err: Exception | None) -> None:
+        """Terminal degradation: serve from the pure-numpy oracle, one
+        request per free capacity unit per heartbeat, every failure
+        captured per-request.  No device, no dispatch — nothing left to
+        fail wholesale."""
+        self._reference = True
+        self.engine = None
+        self.state = None
+        self._log_event("degrade-to", backend="reference",
+                        error=repr(err) if err else None)
+
+    def _step_reference(self) -> list[Result]:
+        results = []
+        for _ in range(self.slots):
+            if not self.queue:
+                break
+            req = self.queue.pop()
+            queued = self._queued_at.pop(req.uid)
+            cap = req.max_cycles or self.max_cycles
+            er, err = None, None
+            if self.faults is not None:
+                err = self.faults.reference_error(req.uid)
+            if err is None:
+                try:
+                    er = run_reference(self.graph, req.feeds, (),
+                                       np.int32, cap)
+                    er.dispatches = 1
+                except Exception as e:
+                    err = e
+            results.append(Result(
+                uid=req.uid, engine=er, error=err,
+                metrics=RequestMetrics(
+                    slot=-1, queued_block=queued,
+                    admitted_block=self.block,
+                    finished_block=self.block + 1,
+                    queue_wait_blocks=self.block - queued,
+                    residency_blocks=1,
+                    residency_cycles=er.cycles if er else 0,
+                    tokens_out=sum(er.counts.values()) if er else 0,
+                    truncated=bool(er and er.cycles >= cap),
+                    degraded=self.degraded,
+                    retries=self._retries.pop(req.uid, 0),
+                    backend="reference")))
+        if results:
+            self.block += 1
+        return results
 
     def _harvest_slots(self, done: list[int],
-                       truncated: bool = False) -> list[Result]:
+                       kind: str = "ok") -> list[Result]:
         if not done:
             return []
         self.state, engine_results = self.engine.harvest(self.state, done)
         results = []
         for b, er in zip(done, engine_results):
             req, admitted = self._resident.pop(b)
-            queued = self._queued_at.pop(req.uid, admitted)
+            # strict: a uid resident in a slot MUST have submit-time
+            # accounting; a silent fallback here would mask the very
+            # bookkeeping bug it pretends to tolerate
+            queued = self._queued_at.pop(req.uid)
             results.append(Result(
                 uid=req.uid, engine=er,
                 metrics=RequestMetrics(
@@ -297,13 +644,19 @@ class DataflowServer:
                     residency_blocks=er.dispatches,
                     residency_cycles=er.cycles,
                     tokens_out=sum(er.counts.values()),
-                    truncated=truncated)))
+                    truncated=kind == "truncated",
+                    expired=kind == "expired",
+                    wedged=kind == "wedged",
+                    degraded=(req.uid in self._degraded_uids
+                              or self.degraded),
+                    retries=self._retries.pop(req.uid, 0),
+                    backend=self.engine.backend)))
         return results
 
     def drain(self) -> list[Result]:
         """Step until the queue and every slot are empty."""
         out: list[Result] = []
-        while self.queue or self._resident:
+        while self.queue or self._resident or self._done:
             out.extend(self.step())
         return out
 
@@ -316,4 +669,4 @@ class DataflowServer:
 
     @property
     def pending(self) -> int:
-        return len(self.queue) + len(self._resident)
+        return len(self.queue) + len(self._resident) + len(self._done)

@@ -31,12 +31,21 @@ class Request:
 
     LM path fields: ``prompt`` / ``max_new_tokens`` / ``eos_id``.
     Dataflow path field: ``feeds`` (arc -> [k] token stream).
+
+    Robustness fields (DESIGN.md §11): ``tenant`` is the fairness key
+    bounded admission round-robins across; ``deadline_blocks`` expires
+    the request — queued or resident — once that many server blocks
+    pass after submit; ``max_cycles`` overrides the engine's cycle cap
+    for this request's slot only (smaller *or* larger).
     """
     uid: int
     prompt: np.ndarray | None = None    # [S] int32 token ids (LM)
     max_new_tokens: int = 16
     eos_id: int | None = None
     feeds: dict | None = None           # arc -> stream (dataflow)
+    tenant: object = None               # admission fairness key
+    deadline_blocks: int | None = None  # expire after N server blocks
+    max_cycles: int | None = None       # per-slot engine-cap override
 
 
 @dataclasses.dataclass
@@ -51,10 +60,22 @@ class RequestMetrics:
     residency_blocks: int     # block dispatches while resident
     residency_cycles: int     # fabric cycles the request ran
     tokens_out: int           # tokens drained across all output arcs
-    truncated: bool = False   # hit the engine's max_cycles cap before
-    #                           quiescing (e.g. a loop fabric whose
-    #                           predicate never went false) — the slot
-    #                           was force-harvested, results are partial
+    truncated: bool = False   # hit its cycle cap (engine max_cycles or
+    #                           Request.max_cycles) before quiescing —
+    #                           the slot was force-harvested, results
+    #                           are partial
+    expired: bool = False     # Request.deadline_blocks elapsed before
+    #                           quiescence; harvested exactly like
+    #                           truncation (partial results), or never
+    #                           admitted at all (slot == -1)
+    wedged: bool = False      # the stall watchdog force-harvested the
+    #                           slot: token/firing counts stopped
+    #                           changing for wedge_timeout_blocks
+    #                           without the quiescence signal arriving
+    degraded: bool = False    # served on a fallback backend (or
+    #                           restarted by a backend degradation)
+    retries: int = 0          # dispatch retries ridden while resident
+    backend: str = ""         # backend that produced the final result
 
 
 @dataclasses.dataclass
@@ -71,3 +92,24 @@ class Result:
     prompt_len: int = 0
     engine: EngineResult | None = None  # fabric result (dataflow)
     metrics: RequestMetrics | None = None
+    error: Exception | None = None      # typed failure: the request was
+    #                                     answered, not computed (queue
+    #                                     drop, exhausted fallback
+    #                                     chain, reference-path fault)
+
+    @property
+    def status(self) -> str:
+        """One-word disposition: ``ok`` | ``truncated`` | ``expired`` |
+        ``wedged`` | ``error`` — the exits of the slot lifecycle state
+        machine (DESIGN.md §11)."""
+        if self.error is not None:
+            return "error"
+        m = self.metrics
+        if m is not None:
+            if m.expired:
+                return "expired"
+            if m.wedged:
+                return "wedged"
+            if m.truncated:
+                return "truncated"
+        return "ok"

@@ -206,7 +206,7 @@ def test_plan_cache_shares_engines_across_requests():
     e1 = cached_engine(g1, backend="xla", block_cycles=4)
     e2 = cached_engine(g2, backend="xla", block_cycles=4)
     assert e1 is e2
-    assert CACHE_STATS == {"hits": 1, "misses": 1}
+    assert CACHE_STATS == {"hits": 1, "misses": 1, "evictions": 0}
     e3 = cached_engine(g1, backend="xla", block_cycles=8)  # new K -> miss
     assert e3 is not e1
     assert CACHE_STATS["misses"] == 2
@@ -236,6 +236,31 @@ def test_plan_cache_key_includes_shape_dtype_and_opt():
     assert cached_engine(g, backend="xla", block_cycles=4,
                          optimize=True) is opt
     assert CACHE_STATS["hits"] == 2
+
+
+def test_plan_cache_lru_eviction_order(monkeypatch):
+    """LRU semantics under interleaved hits/misses/evictions: a hit
+    refreshes recency, the oldest-unused entry is the eviction victim,
+    and CACHE_STATS tracks all three event kinds exactly."""
+    import repro.serve.dataflow_server as ds
+    clear_engine_cache()
+    monkeypatch.setattr(ds, "_ENGINE_CACHE_MAX", 2)
+    g = library.vector_sum_graph(8).graph
+    e1 = cached_engine(g, backend="xla", block_cycles=1)
+    e2 = cached_engine(g, backend="xla", block_cycles=2)
+    assert CACHE_STATS == {"hits": 0, "misses": 2, "evictions": 0}
+    # a hit refreshes e1's recency, making e2 the LRU victim
+    assert cached_engine(g, backend="xla", block_cycles=1) is e1
+    e3 = cached_engine(g, backend="xla", block_cycles=3)
+    assert CACHE_STATS == {"hits": 1, "misses": 3, "evictions": 1}
+    # e1 survived the eviction (it was refreshed)...
+    assert cached_engine(g, backend="xla", block_cycles=1) is e1
+    assert CACHE_STATS["hits"] == 2
+    # ...e2 did not: asking again recompiles (a miss), evicting e3
+    assert cached_engine(g, backend="xla", block_cycles=2) is not e2
+    assert CACHE_STATS == {"hits": 2, "misses": 4, "evictions": 2}
+    assert cached_engine(g, backend="xla", block_cycles=3) is not e3
+    assert len(ds._ENGINE_CACHE) == 2
 
 
 def test_server_optimized_matches_solo_dense_runs():

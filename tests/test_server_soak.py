@@ -20,7 +20,10 @@ import numpy as np
 import pytest
 
 from repro.core import library
+from repro.core.engine import DataflowEngine
 from repro.serve.dataflow_server import DataflowServer
+from repro.serve.faults import FaultPlan
+from repro.serve.types import Request
 
 
 @pytest.mark.parametrize("backend,min_blocks",
@@ -83,3 +86,88 @@ def test_server_soak_random_schedule(backend, min_blocks):
     uid = srv.submit(feeds)
     again = {r.uid: r for r in srv.drain()}
     assert uid in again and again[uid].metrics.tokens_out == 2
+
+
+def test_server_chaos_soak_under_seeded_fault_plan():
+    """Chaos soak (DESIGN.md §11): >= 200 blocks of mixed traffic —
+    tenants, deadlines, per-request budgets — through a seeded
+    FaultPlan injecting transient dispatch failures, wedged slots, and
+    poisoned feeds.  ``REPRO_FAULTS=full`` (the CI chaos job) doubles
+    the fault rates; ``REPRO_FAULTS=off`` skips injection entirely.
+
+    Invariants: the server never raises, every submitted uid receives
+    exactly one Result with a known disposition, no slot leaks after
+    drain, and every *unfaulted* request (no poison, no deadline, no
+    budget) finishes ok or wedged with results bit-identical to a solo
+    ``DataflowEngine.run`` — wedges suppress the quiescence signal,
+    never the computation, so even wedged values must match.
+    """
+    plan = FaultPlan.scaled(seed=7,
+                            dispatch_fail_rate=0.04, transient_attempts=1,
+                            wedge_rate=0.10, poison_rate=0.12)
+    if plan is None:
+        pytest.skip("REPRO_FAULTS=off")
+    bench = library.vector_sum_graph(8)
+    srv = DataflowServer(bench.graph, slots=4, block_cycles=2,
+                         backend="xla", max_retries=3,
+                         wedge_timeout_blocks=4, faults=plan)
+    rng = np.random.default_rng(1234)
+    submitted: dict[int, Request] = {}
+    results = {}
+    uid = 0
+    safety = 0
+    while srv.block < 200:
+        safety += 1
+        assert safety < 20_000, "chaos soak stalled"
+        in_flight = len(submitted) - len(results)
+        if rng.random() < 0.5 and in_flight < 14:
+            uid += 1
+            k = int(rng.integers(1, 7))
+            roll = rng.random()
+            req = Request(
+                uid=uid,
+                feeds=library.random_feeds("vector_sum", bench, k, rng),
+                tenant=("a", "b", None)[uid % 3],
+                deadline_blocks=int(rng.integers(1, 40))
+                if roll < 0.15 else None,
+                max_cycles=int(rng.integers(1, 6)) if roll > 0.9 else None)
+            srv.submit(req)
+            submitted[uid] = req
+        for r in srv.step():            # must never raise
+            assert r.uid not in results, "duplicate result"
+            results[r.uid] = r
+    for r in srv.drain():
+        assert r.uid not in results, "duplicate result"
+        results[r.uid] = r
+
+    # -- conservation: one result per submission, no leaks ---------------
+    assert set(results) == set(submitted) and len(submitted) > 30
+    assert srv.pending == 0 and not srv.queue
+    assert not srv.state.active.any()
+    assert srv._resident == {} and srv._queued_at == {}
+    known = {"ok", "truncated", "expired", "wedged", "error"}
+    assert {r.status for r in results.values()} <= known
+
+    # -- fault schedule actually fired (seeded, so deterministic) --------
+    kinds = {k for k, *_ in plan.log}
+    assert "poison" in kinds and "dispatch-transient" in kinds
+
+    # -- unfaulted requests: bit-identical to solo runs ------------------
+    eng = DataflowEngine(bench.graph, backend="xla", block_cycles=2)
+    checked = 0
+    for u, req in submitted.items():
+        if req.deadline_blocks is not None or req.max_cycles is not None \
+                or plan.poisoned(u):
+            continue
+        r = results[u]
+        assert r.status in ("ok", "wedged"), (u, r.status)
+        solo = eng.run(req.feeds)
+        assert r.engine.counts == solo.counts, u
+        assert r.engine.cycles == solo.cycles, u
+        assert r.engine.fired == solo.fired, u
+        for a, c in solo.counts.items():
+            if c:
+                assert int(np.asarray(r.engine.outputs[a])) == \
+                    int(np.asarray(solo.outputs[a])), (u, a)
+        checked += 1
+    assert checked > 10, "soak must exercise enough unfaulted requests"
