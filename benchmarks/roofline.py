@@ -1,5 +1,14 @@
 """Roofline table: aggregate the dry-run JSON records (launch/dryrun.py)
-into the per-(arch x shape x mesh) table for EXPERIMENTS.md §Roofline.
+into the per-(arch x shape x mesh) table for EXPERIMENTS.md §Roofline,
+plus the fabric-interior roofline from the §12 counter sweep
+(BENCH_profile.json, written by ``run.py --trace``).
+
+The fabric section compares each bench's *achieved* cadence against
+the paper fabric's handshake bound: an arc's full/empty register pair
+moves at most one token every 2 cycles, so per-arc occupancy is
+bounded by 0.5 at steady state and a node can fire at most every
+other cycle.  ``cadence_frac`` = hottest node's fires-per-cycle over
+that 0.5 bound — the dataflow analogue of "fraction of peak FLOPs".
 
 CSV: name,us_per_call,derived  (us_per_call = dominant term in us)
 """
@@ -11,6 +20,58 @@ import os
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
                           "experiments", "dryrun")
+
+PROFILE_JSON = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_profile.json")
+
+# handshake cadence bound: 1 token per 2 cycles per arc (DESIGN.md §2)
+CADENCE_BOUND = 0.5
+
+
+def fabric_rows(path: str | None = None) -> list[dict]:
+    """Fabric-interior roofline rows from the §12 profile sweep."""
+    path = path or PROFILE_JSON
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        recs = json.load(f)
+    rows = []
+    for r in recs:
+        p = r["profile"]
+        cycles = max(p["cycles"], 1)
+        hot = max(p["nodes"], key=lambda n: n["fires"],
+                  default={"name": "-", "fires": 0})
+        hot_rate = hot["fires"] / cycles
+        occ = [a["busy"] / cycles for a in p["arcs"]]
+        rows.append(dict(
+            name=r["name"], backend=r["backend"],
+            cycles=p["cycles"], fired=p["fired"],
+            dispatches=p["dispatches"],
+            fires_per_dispatch=round(p["fires_per_dispatch"], 1),
+            utilization=round(p["utilization"], 4),
+            hot_node=hot["name"],
+            hot_fires_per_cycle=round(hot_rate, 4),
+            cadence_frac=round(hot_rate / CADENCE_BOUND, 4),
+            max_arc_occupancy=round(max(occ, default=0.0), 4),
+            mean_arc_occupancy=round(
+                sum(occ) / len(occ), 4) if occ else 0.0))
+    return rows
+
+
+def fabric_main(path: str | None = None) -> None:
+    rows = fabric_rows(path)
+    if not rows:
+        print("roofline_fabric_no_records,0,run run.py --trace first")
+        return
+    for r in rows:
+        print(f"roofline_fabric_{r['name']}_{r['backend']},0,"
+              f"fires_per_dispatch={r['fires_per_dispatch']};"
+              f"util={r['utilization']};"
+              f"hot={r['hot_node']}@{r['hot_fires_per_cycle']}/cyc;"
+              f"cadence_frac={r['cadence_frac']}"
+              f"(bound={CADENCE_BOUND}/arc);"
+              f"arc_occ_max={r['max_arc_occupancy']};"
+              f"arc_occ_mean={r['mean_arc_occupancy']}")
 
 
 def load(tag: str | None = None, mesh: str | None = None):
@@ -39,6 +100,7 @@ def table(recs):
 
 
 def main():
+    fabric_main()
     recs = load(tag="baseline", mesh="pod")
     if not recs:
         print("roofline_no_records,0,run launch/dryrun.py first")

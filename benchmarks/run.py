@@ -7,6 +7,9 @@
   opt_*      graph-compiler optimization sweep: off vs spec vs full
              across backends x K x B (BENCH_opt.json; --opt runs it
              alone, --quick --opt is the CI smoke)
+  profile_*  §12 fabric-counter sweep (profiled engines; BENCH_profile
+             .json feeds roofline.py's fabric section; --trace runs it
+             alone, --quick --trace is the CI smoke)
   kernel_*   Pallas kernel micro-benchmarks vs jnp references
   train_*    end-to-end reduced-config train-step timings (per family)
   roofline_* aggregated dry-run roofline terms (if records exist)
@@ -87,6 +90,54 @@ def opt_json(path: str | None = None) -> list[dict]:
     return recs
 
 
+def profile_json(path: str | None = None, quick: bool = False,
+                 benches=None, backends=("xla", "pallas", "reference"),
+                 k_tokens: int = 8, block: int = 8) -> list[dict]:
+    """``--trace``: run library benches with DESIGN.md §12 profiling on
+    and write BENCH_profile.json — one record per bench x backend with
+    the FabricProfile export (per-node fires/stalls, per-arc occupancy,
+    fires-per-dispatch).  roofline.py's fabric section reads this file.
+
+    Each record is cross-checked before it is written: profiling must
+    not perturb results (outputs/fired/cycles bit-identical to an
+    unprofiled engine) and the §12 partition invariant must hold."""
+    from repro.core import library
+    from repro.core.engine import DataflowEngine
+
+    benches = benches or (("vector_sum", "gcd") if quick else
+                          ("vector_sum", "fir", "fibonacci", "gcd",
+                           "newton_sqrt", "bubble_sort"))
+    recs = []
+    for name in benches:
+        bench = library.BENCHES[name]()
+        if np.dtype(bench.dtype) != np.int32:
+            continue
+        feeds = library.random_feeds(name, bench, k_tokens,
+                                     np.random.default_rng(42))
+        for backend in backends:
+            eng = DataflowEngine(bench.graph, backend=backend,
+                                 block_cycles=block, profile=True)
+            res = eng.run(feeds)
+            prof = res.profile
+            prof.check()
+            base = DataflowEngine(bench.graph, backend=backend,
+                                  block_cycles=block).run(feeds)
+            assert base.outputs == res.outputs \
+                and base.fired == res.fired \
+                and base.cycles == res.cycles, \
+                f"profiling perturbed {name}/{backend}"
+            assert prof.fired == res.fired
+            recs.append(dict(name=name, backend=backend, K=block,
+                             k_tokens=k_tokens, profile=prof.to_json()))
+            print(f"profile_{name}_{backend},0,{prof.summary()}")
+    if not quick:
+        path = path or os.path.join(os.path.dirname(__file__), "..",
+                                    "BENCH_profile.json")
+        with open(path, "w") as f:
+            json.dump(recs, f, indent=1)
+    return recs
+
+
 def quick_opt() -> None:
     """CI smoke for the optimization sweep: 2 benches, tiny workloads,
     every level, no JSON (the committed BENCH_opt.json is a full-run
@@ -104,6 +155,7 @@ def main() -> None:
     table1_dataflow.main()
     dataflow_json()
     opt_json()
+    profile_json()
     kernels_bench.main()
     _train_steps()
     roofline.main()
@@ -130,7 +182,9 @@ if __name__ == "__main__":
     import sys
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))   # `benchmarks` importable from CLI
-    if "--quick" in sys.argv:
+    if "--trace" in sys.argv:
+        profile_json(quick="--quick" in sys.argv)  # the §12 sweep alone
+    elif "--quick" in sys.argv:
         quick_opt() if "--opt" in sys.argv else quick()
     elif "--opt" in sys.argv:
         opt_json()                     # the opt sweep alone

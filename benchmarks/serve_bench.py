@@ -201,6 +201,63 @@ def fault_rows(benches=("vector_sum",), backend="xla", R: int = 16,
     return out
 
 
+def export_observability(bench_name: str = "vector_sum",
+                         backend: str = "xla", R: int = 8,
+                         slots: int = 2, block: int = 4,
+                         long_len: int = 8,
+                         trace_path: str | None = None,
+                         metrics_path: str | None = None) -> dict:
+    """``--trace``: one fully instrumented serve (profile + trace +
+    metrics all on); writes BENCH_serve_trace.json (Chrome trace-event
+    JSON — load it in Perfetto / chrome://tracing) and
+    BENCH_serve_metrics.json, then re-loads and validates both so a
+    malformed export fails the CI smoke right here.
+
+    Honours ``REPRO_FAULTS``: when the chaos job sets it (anything but
+    "off"), the serve runs under a seeded FaultPlan and the export must
+    contain fault-injection events."""
+    from repro.obs import (MetricsRegistry, TraceRecorder, load_chrome,
+                           validate_chrome, validate_snapshot)
+    bench = library.BENCHES[bench_name]()
+    feeds = workload(bench_name, bench, R, long_len=long_len, every=3)
+    chaos = os.environ.get("REPRO_FAULTS", "").lower() not in ("", "off")
+    plan = FaultPlan.scaled(seed=11, dispatch_fail_rate=0.1,
+                            transient_attempts=1, wedge_rate=0.15,
+                            poison_rate=0.15) if chaos else None
+    tr, mr = TraceRecorder(), MetricsRegistry()
+    srv = DataflowServer(bench.graph, slots=slots, block_cycles=block,
+                         backend=backend, wedge_timeout_blocks=4,
+                         faults=plan, profile=True, trace=tr, metrics=mr)
+    for f in feeds:
+        srv.submit(f)
+    res = srv.drain()
+    assert len(res) == R, "every request must be answered"
+    profiled = [r for r in res
+                if r.engine is not None and r.engine.profile is not None]
+    for r in profiled:
+        r.engine.profile.check()
+    fires = sum(r.engine.profile.fired for r in profiled)
+    root = os.path.join(os.path.dirname(__file__), "..")
+    trace_path = trace_path or os.path.join(root, "BENCH_serve_trace.json")
+    metrics_path = metrics_path or os.path.join(root,
+                                                "BENCH_serve_metrics.json")
+    tr.save(trace_path)
+    mr.save(metrics_path)
+    info = validate_chrome(load_chrome(trace_path))
+    with open(metrics_path) as f:
+        validate_snapshot(json.load(f))
+    kinds = sorted({e.kind for e in tr.events})
+    if plan is not None and plan.log:
+        assert "fault" in kinds, \
+            f"chaos run injected faults but the trace has none: {kinds}"
+    print(f"serve_trace_{bench_name}_{backend},0,"
+          f"events={info['events']};uids={info['uids']};"
+          f"tracks={info['tracks']};fires={fires};"
+          f"chaos={int(chaos)};kinds={'+'.join(kinds)}")
+    return dict(trace=trace_path, metrics=metrics_path, kinds=kinds,
+                fires=fires, **info)
+
+
 def print_csv(recs):
     for r in recs:
         base = f"serve_{r['name']}_{r['backend']}"
@@ -254,3 +311,5 @@ def quick(path: str | None = None) -> list[dict]:
 
 if __name__ == "__main__":
     quick() if "--quick" in sys.argv else main()
+    if "--trace" in sys.argv:
+        export_observability()

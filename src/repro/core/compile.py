@@ -311,7 +311,8 @@ EXECUTORS = ("auto", "dag", "unrolled", *BACKENDS)
 
 def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
             max_cycles: int = 100_000, backend: str = "auto",
-            block_cycles: int = 16, optimize=False):
+            block_cycles: int = 16, optimize=False,
+            profile: bool = False):
     """THE compile pipeline: probe traits, pick a legal executor +
     optimize level, return ``run(feeds) -> EngineResult`` (or the
     vmapped stream fn for the "dag" executor).
@@ -345,6 +346,12 @@ def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
         output arcs drain bit-identical values and token counts while
         ``cycles``/``fired`` may shrink.
 
+    profile=True turns on the DESIGN.md §12 fabric counters: every
+    EngineResult carries ``node_fires`` and a
+    :class:`repro.obs.FabricProfile`.  Engine backends only — the SSA
+    executors have no fabric to count, so asking is an error, not a
+    silent no-op.
+
     The returned callable exposes the (possibly rewritten) graph as
     ``.graph``, the rewrite report as ``.report`` (None when no
     rewrites ran), and the capability probe as ``.traits``.
@@ -363,6 +370,11 @@ def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
             'optimize="spec" needs an engine backend '
             f'({BACKENDS_NOTE}); backend={backend!r} only supports the '
             'rewrite pipeline (optimize="full"/True)')
+    if profile and backend not in BACKENDS:
+        raise ValueError(
+            f"profile=True needs an engine backend ({BACKENDS_NOTE}); "
+            f"backend={backend!r} runs SSA semantics with no fabric "
+            "cycles to count")
     report = None
     if optimize in (True, "full"):
         from repro.core import passes
@@ -382,7 +394,8 @@ def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
         from repro.core.engine import DataflowEngine
         eng = DataflowEngine(graph, token_shape, dtype, max_cycles,
                              backend=backend, block_cycles=block_cycles,
-                             optimize=optimize is not False)
+                             optimize=optimize is not False,
+                             profile=profile)
         run = lambda feeds, max_cycles=None: eng.run(feeds, max_cycles)
         run.engine = eng
     elif backend == "unrolled":
@@ -404,17 +417,19 @@ def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
 
 def compile_graph(graph: Graph, token_shape=(), dtype=jnp.int32,
                   max_cycles: int = 100_000, backend: str = "auto",
-                  block_cycles: int = 16, optimize=False):
+                  block_cycles: int = 16, optimize=False,
+                  profile: bool = False):
     """Deprecated name for :func:`compile` (kept as a thin wrapper —
     the historical PR 1–4 entry point).  New code should call
     ``compile`` directly."""
     return compile(graph, token_shape, dtype, max_cycles, backend,
-                   block_cycles, optimize)
+                   block_cycles, optimize, profile)
 
 
 def compile_fn(fn, *avals, backend: str = "xla", block_cycles: int = 16,
                optimize=False, max_cycles: int = 100_000,
-               name: str | None = None, const_args: dict | None = None):
+               name: str | None = None, const_args: dict | None = None,
+               profile: bool = False):
     """Trace a scalar jax program (:func:`repro.front.trace`) and hand
     the synthesized fabric to :func:`compile` in one step.
 
@@ -443,7 +458,8 @@ def compile_fn(fn, *avals, backend: str = "xla", block_cycles: int = 16,
     run = compile(prog, token_shape=(),
                   dtype=jnp.dtype(str(prog.dtype)),
                   max_cycles=max_cycles, backend=backend,
-                  block_cycles=block_cycles, optimize=optimize)
+                  block_cycles=block_cycles, optimize=optimize,
+                  profile=profile)
     run.traced = prog
     run.make_feeds = prog.make_feeds
     run.out_arcs = list(prog.out_arcs)

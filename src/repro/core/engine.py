@@ -221,6 +221,35 @@ def _truthy(v):
     return flat[:, 0] != 0
 
 
+def _node_inputs_ready(opcode, in_idx, full, val):
+    """Per-node "all (selected) inputs present" on the post-feed
+    registers — the stall-attribution predicate (DESIGN.md §12).
+
+    ``ready`` (the fire rule) implies inputs-ready, so a profiled cycle
+    partitions every node into exactly one of fired / blocked-on-input
+    (``~inputs_ready``) / blocked-on-output (``inputs_ready & ~ready``).
+    Shared by the xla cycle body and the pallas block kernels (``full``
+    may be bool or int32; pads make the generic all-inputs reduction
+    correct for BRANCH)."""
+    inf = full[in_idx].astype(bool)              # [N,3]
+    ir = inf.all(axis=1)
+    is_nd = opcode == int(Op.NDMERGE)
+    is_dm = opcode == int(Op.DMERGE)
+    ir = jnp.where(is_nd, inf[:, 0] | inf[:, 1], ir)
+    ctrl3 = _truthy(val[in_idx[:, 2]])
+    ir = jnp.where(is_dm,
+                   inf[:, 2] & jnp.where(ctrl3, inf[:, 0], inf[:, 1]), ir)
+    return ir
+
+
+def _prof_zeros(n_nodes: int, n_arcs: int, batch: int | None = None):
+    """Fresh profile accumulators (nf, si, so, ab, ahw) — int32 device
+    arrays; node axis may include the pallas tables' dummy row."""
+    shp = (batch,) if batch is not None else ()
+    z = lambda n: jnp.zeros((*shp, n), jnp.int32)
+    return (z(n_nodes), z(n_nodes), z(n_nodes), z(n_arcs), z(n_arcs))
+
+
 @dataclasses.dataclass
 class EngineResult:
     outputs: dict       # arc -> last token value (jnp array)
@@ -228,6 +257,10 @@ class EngineResult:
     cycles: int
     fired: int          # total node firings
     dispatches: int | None = None   # device dispatches used (if tracked)
+    node_fires: np.ndarray | None = None  # int64[N] per-node firings in
+                                          # graph order (profile=on; sums
+                                          # exactly to `fired`)
+    profile: object | None = None   # FabricProfile (profile=on)
 
 
 @dataclasses.dataclass
@@ -268,6 +301,15 @@ class SlotState:
                     firing, no drain) while the slot stayed active —
                     the progress counter a wedged-slot watchdog reads;
                     reset to 0 by any progress and on (re)admission
+
+    Profiling (engine profile=on only; None otherwise):
+      prof          tuple of 5 device counter arrays (node_fires,
+                    stall_in, stall_out, arc_busy, arc_hw — leading B
+                    axis, plan order) accumulated IN-KERNEL alongside
+                    the block step, so profiling adds no extra
+                    dispatches per block
+      prof_cycles[B] host tally of cycles the resident request's slot
+                    was simulated for (its profiled-cycle denominator)
     """
     fv: object
     fl: object
@@ -286,6 +328,8 @@ class SlotState:
     stalled: np.ndarray = None
     active_dev: object = None   # device mirror of `active` (refreshed on
                                 # admission/harvest, not per block)
+    prof: tuple | None = None
+    prof_cycles: np.ndarray = None
 
     @property
     def slots(self) -> int:
@@ -312,6 +356,17 @@ def _slot_reset(fv, fl, full, val, ptr, out_last, out_count, mask,
             jnp.where(m1, 0, ptr),
             jnp.where(m1, 0, out_last),
             jnp.where(m1, 0, out_count))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _prof_reset(prof, mask):
+    """Zero the masked slots' profile counters (one fused dispatch per
+    admission round; only exists on profiled engines — kept out of
+    :func:`_slot_reset` so the unprofiled path's dispatch signature and
+    count are untouched)."""
+    return tuple(
+        jnp.where(mask.reshape((-1,) + (1,) * (x.ndim - 1)), 0, x)
+        for x in prof)
 
 
 def pack_feeds(input_arcs, feeds, token_shape=(), dtype=np.int32,
@@ -369,7 +424,7 @@ class DataflowEngine:
     def __init__(self, graph: Graph, token_shape: tuple[int, ...] = (),
                  dtype=jnp.int32, max_cycles: int = 100_000,
                  backend: str = "xla", block_cycles: int = 1,
-                 optimize: bool = False):
+                 optimize: bool = False, profile: bool = False):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
         if block_cycles < 1:
@@ -386,6 +441,12 @@ class DataflowEngine:
         # (The reference backend is the oracle and always runs the
         # graph as authored.)
         self.optimize = bool(optimize)
+        # profile=True accumulates the DESIGN.md §12 fabric counters in
+        # device state alongside every run/block step.  Results stay
+        # bit-identical; with profile=False the traced computations are
+        # byte-for-byte the pre-observability ones (zero overhead, zero
+        # extra dispatches).
+        self.profile = bool(profile)
         self.p = _plan(graph, optimize=self.optimize)
         self._slot_steps: dict[int, object] = {}
         self._tables = None
@@ -416,17 +477,22 @@ class DataflowEngine:
         max_cycles = max_cycles or self.max_cycles
         if self.backend == "reference":
             return run_reference(self.graph, feeds, self.token_shape,
-                                 np.dtype(str(self.dtype)), max_cycles)
+                                 np.dtype(str(self.dtype)), max_cycles,
+                                 profile=self.profile)
         if self.backend == "pallas":
             return self._run_pallas(feeds, max_cycles)
         p = self.p
         feed_vals, feed_len = pack_feeds(
             p["input_arcs"], feeds, self.token_shape, self.dtype)
-        outs, counts, cycles, fired = self._run(
-            jnp.asarray(feed_vals), jnp.asarray(feed_len),
-            max_cycles=max_cycles)
+        res = self._run(jnp.asarray(feed_vals), jnp.asarray(feed_len),
+                        max_cycles=max_cycles)
+        outs, counts, cycles, fired = res[:4]
+        prof = None
+        if self.profile:
+            prof = (*jax.device_get(res[4:9]), int(res[9]), 1)
         return self._result_from_state(outs, counts, int(cycles),
-                                       int(fired), dispatches=1)
+                                       int(fired), dispatches=1,
+                                       prof=prof)
 
     def run_batch(self, feeds_batch, max_cycles: int | None = None
                   ) -> list[EngineResult]:
@@ -444,7 +510,8 @@ class DataflowEngine:
                 "feed dict (use run() for a single stream)")
         if self.backend == "reference":
             return [run_reference(self.graph, f, self.token_shape,
-                                  np.dtype(str(self.dtype)), max_cycles)
+                                  np.dtype(str(self.dtype)), max_cycles,
+                                  profile=self.profile)
                     for f in feeds_batch]
         p = self.p
         L = max((max((np.shape(v)[0] for v in (f or {}).values()),
@@ -464,20 +531,35 @@ class DataflowEngine:
             vrun = jax.jit(jax.vmap(
                 lambda fv, fl: self._run_impl(fv, fl, max_cycles=mc)))
             self._vruns[max_cycles] = vrun
-        outs, counts, cycles, fired = vrun(jnp.asarray(feed_vals),
-                                           jnp.asarray(feed_len))
-        return [self._result_from_state(outs[b], counts[b], int(cycles[b]),
-                                        int(fired[b]), dispatches=1)
-                for b in range(len(feeds_batch))]
+        res = vrun(jnp.asarray(feed_vals), jnp.asarray(feed_len))
+        outs, counts, cycles, fired = res[:4]
+        prof = jax.device_get(res[4:10]) if self.profile else None
+        return [self._result_from_state(
+            outs[b], counts[b], int(cycles[b]), int(fired[b]), dispatches=1,
+            prof=None if prof is None else
+            (*(x[b] for x in prof[:5]), int(prof[5][b]), 1))
+            for b in range(len(feeds_batch))]
 
     def _result_from_state(self, out_last, out_count, cycles, fired,
-                           dispatches):
-        """Per-arc result dicts from flat accumulators (all backends)."""
+                           dispatches, prof=None):
+        """Per-arc result dicts from flat accumulators (all backends).
+
+        prof: optional (nf, si, so, ab, ahw, profiled_cycles,
+        dispatches) plan-order counter tuple — converted to a
+        graph-order :class:`repro.obs.FabricProfile`."""
         out_arcs = self.p["output_arcs"]
+        profile = node_fires = None
+        if prof is not None:
+            from repro.obs.profile import FabricProfile
+            profile = FabricProfile.from_plan(self.graph, self.p,
+                                              *prof[:5], cycles=prof[5],
+                                              dispatches=prof[6])
+            node_fires = profile.node_fires
         return EngineResult(
             outputs={a: out_last[i] for i, a in enumerate(out_arcs)},
             counts={a: int(out_count[i]) for i, a in enumerate(out_arcs)},
-            cycles=cycles, fired=fired, dispatches=dispatches)
+            cycles=cycles, fired=fired, dispatches=dispatches,
+            node_fires=node_fires, profile=profile)
 
     # -- resumable slot API (continuous batching) ------------------------
     #
@@ -535,7 +617,12 @@ class DataflowEngine:
             active=np.zeros((B,), np.int32), base=z64(), last=z64(),
             fired=z64(), quiesced=np.zeros((B,), bool), dispatches=z64(),
             cap=np.full((B,), self.max_cycles, np.int64), stalled=z64(),
-            active_dev=jnp.zeros((B,), jnp.int32))
+            active_dev=jnp.zeros((B,), jnp.int32),
+            # profiled engines ride the counters in device state; the
+            # slot steppers run on the kernel tables (N+1 node rows)
+            prof=_prof_zeros(len(self.graph.nodes) + 1, p["A"] + 2,
+                             batch=B) if self.profile else None,
+            prof_cycles=z64() if self.profile else None)
 
     def _slot_step(self, n_cycles: int):
         """Jitted masked batched block step (backend-appropriate)."""
@@ -545,8 +632,10 @@ class DataflowEngine:
         if step is None:
             from repro.kernels import ref as _kref
             tables = self._block_tables()
-            fn = functools.partial(_kref.fire_block_masked_ref, tables,
-                                   n_cycles=n_cycles)
+            fn = functools.partial(
+                _kref.fire_block_masked_prof_ref if self.profile
+                else _kref.fire_block_masked_ref,
+                tables, n_cycles=n_cycles)
             step = jax.jit(jax.vmap(fn))
             self._slot_steps[n_cycles] = step
         return step
@@ -623,10 +712,16 @@ class DataflowEngine:
         quiesced = state.quiesced.copy()
         active[slot_ids] = 1
         quiesced[slot_ids] = False
+        prof, prof_cycles = state.prof, state.prof_cycles
+        if self.profile and prof is not None:
+            prof = _prof_reset(prof, jnp.asarray(mask))
+            prof_cycles = prof_cycles.copy()
+            prof_cycles[slot_ids] = 0
         return SlotState(fv_, fl_, full, val, ptr, out_last, out_count,
                          active, base, last, fired, quiesced, disp,
                          cap=cap, stalled=stalled,
-                         active_dev=jnp.asarray(active))
+                         active_dev=jnp.asarray(active),
+                         prof=prof, prof_cycles=prof_cycles)
 
     def step_block(self, state: SlotState,
                    n_cycles: int | None = None) -> SlotState:
@@ -644,9 +739,16 @@ class DataflowEngine:
         step = self._slot_step(nb)
         active_dev = state.active_dev if state.active_dev is not None \
             else jnp.asarray(state.active)
-        *dev, f, lp = step(state.fv, state.fl, state.full, state.val,
-                           state.ptr, state.out_last, state.out_count,
-                           active_dev)
+        if self.profile:
+            res = step(state.fv, state.fl, state.full, state.val,
+                       state.ptr, state.out_last, state.out_count,
+                       active_dev, *state.prof)
+            dev, f, lp, prof = res[:5], res[5], res[6], tuple(res[7:12])
+        else:
+            *dev, f, lp = step(state.fv, state.fl, state.full, state.val,
+                               state.ptr, state.out_last, state.out_count,
+                               active_dev)
+            prof = state.prof
         f, lp = jax.device_get((f, lp))      # one host sync per block
         f = np.asarray(f).reshape(state.slots)
         lp = np.asarray(lp).reshape(state.slots)
@@ -663,10 +765,14 @@ class DataflowEngine:
         stalled = np.where(state.active > 0,
                            np.where(lp > 0, 0, state.stalled + 1),
                            state.stalled)
+        prof_cycles = state.prof_cycles
+        if self.profile and prof_cycles is not None:
+            prof_cycles = prof_cycles + np.where(state.active > 0, nb, 0)
         return SlotState(state.fv, state.fl, *dev, state.active.copy(),
                          base, last, fired, quiesced, disp,
                          cap=state.cap, stalled=stalled,
-                         active_dev=active_dev)
+                         active_dev=active_dev,
+                         prof=prof, prof_cycles=prof_cycles)
 
     def harvest(self, state: SlotState, slot_ids
                 ) -> tuple[SlotState, list[EngineResult]]:
@@ -682,10 +788,15 @@ class DataflowEngine:
             raise ValueError(f"slots {idle} are free — nothing to harvest")
         out_last, out_count = jax.device_get((state.out_last,
                                               state.out_count))
+        prof = jax.device_get(state.prof) if self.profile \
+            and state.prof is not None else None
         results = [self._result_from_state(
             out_last[b], out_count[b],
             int(min(state.last[b] + 1, state.cap[b])),
-            int(state.fired[b]), int(state.dispatches[b]))
+            int(state.fired[b]), int(state.dispatches[b]),
+            prof=None if prof is None else
+            (*(x[b] for x in prof), int(state.prof_cycles[b]),
+             int(state.dispatches[b])))
             for b in slot_ids]
         active = state.active.copy()
         quiesced = state.quiesced.copy()
@@ -705,7 +816,8 @@ class DataflowEngine:
         if step is None:
             from repro.kernels import ops as _kops
             _, step = _kops.make_block_step(
-                self.graph, n_cycles, batched=batched, tables=self._tables)
+                self.graph, n_cycles, batched=batched, tables=self._tables,
+                profile=self.profile)
             self._steps[key] = step
         return step
 
@@ -728,11 +840,18 @@ class DataflowEngine:
                             pad_rows=1)
         fv, fl = jnp.asarray(fv), jnp.asarray(fl)
         state = self._pallas_state0()
+        prof = _prof_zeros(len(self.graph.nodes) + 1, p["A"] + 2) \
+            if self.profile else None
         base = last = fired = dispatches = 0
         while True:
             nb = min(K, max_cycles - base)  # never simulate past the cap
-            *state, f, lp = self._pallas_step(nb, False)(fv, fl, *state)
-            state = tuple(state)
+            if self.profile:
+                res = self._pallas_step(nb, False)(fv, fl, *state, *prof)
+                state, f, lp = res[:5], res[5], res[6]
+                prof = tuple(res[7:12])
+            else:
+                *state, f, lp = self._pallas_step(nb, False)(fv, fl, *state)
+                state = tuple(state)
             dispatches += 1
             fired += int(f[0])
             lp = int(lp[0])
@@ -742,8 +861,10 @@ class DataflowEngine:
             if lp < nb or base >= max_cycles:
                 break   # idle block tail => quiescent (idle is absorbing)
         cycles = min(last + 1, max_cycles)
-        return self._result_from_state(state[3], state[4], cycles, fired,
-                                       dispatches)
+        return self._result_from_state(
+            state[3], state[4], cycles, fired, dispatches,
+            prof=None if prof is None else
+            (*jax.device_get(prof), base, dispatches))
 
     def _run_pallas_batch(self, feed_vals, feed_len,
                           max_cycles: int) -> list[EngineResult]:
@@ -751,15 +872,23 @@ class DataflowEngine:
         B = feed_vals.shape[0]
         fv, fl = jnp.asarray(feed_vals), jnp.asarray(feed_len)
         state = self._pallas_state0(batch=B)
+        prof = _prof_zeros(len(self.graph.nodes) + 1, self.p["A"] + 2,
+                           batch=B) if self.profile else None
         base = dispatches = 0
         last = np.zeros((B,), np.int64)
         fired = np.zeros((B,), np.int64)
         ones = jnp.ones((B,), jnp.int32)
         while True:
             nb = min(K, max_cycles - base)  # never simulate past the cap
-            *state, f, lp = self._pallas_step(nb, True)(fv, fl, *state,
-                                                        ones)
-            state = tuple(state)
+            if self.profile:
+                res = self._pallas_step(nb, True)(fv, fl, *state, ones,
+                                                  *prof)
+                state, f, lp = res[:5], res[5], res[6]
+                prof = tuple(res[7:12])
+            else:
+                *state, f, lp = self._pallas_step(nb, True)(fv, fl, *state,
+                                                            ones)
+                state = tuple(state)
             dispatches += 1
             fired += np.asarray(f)[:, 0]
             lp = np.asarray(lp)[:, 0]
@@ -767,9 +896,12 @@ class DataflowEngine:
             base += nb
             if (lp < nb).all() or base >= max_cycles:
                 break
+        hprof = jax.device_get(prof) if prof is not None else None
         return [self._result_from_state(
             state[3][b], state[4][b],
-            int(min(last[b] + 1, max_cycles)), int(fired[b]), dispatches)
+            int(min(last[b] + 1, max_cycles)), int(fired[b]), dispatches,
+            prof=None if hprof is None else
+            (*(x[b] for x in hprof), base, dispatches))
             for b in range(B)]
 
     # -- implementation ---------------------------------------------------
@@ -806,6 +938,11 @@ class DataflowEngine:
             last_prog=jnp.int32(0),
             progress=jnp.bool_(True),
         )
+        profile = self.profile
+        if profile:
+            nf0, si0, so0, ab0, ahw0 = _prof_zeros(len(self.graph.nodes),
+                                                   A + 2)
+            state0.update(nf=nf0, si=si0, so=so0, ab=ab0, ahw=ahw0)
 
         EMPTY_PAD = p["EMPTY_PAD"]
         FULL_PAD = p["FULL_PAD"]
@@ -956,6 +1093,10 @@ class DataflowEngine:
                 ptr, fed_any = s["ptr"], jnp.bool_(False)
 
             # --- 2. fire every ready node --------------------------------
+            if profile:
+                # stall attribution reads the post-feed registers the
+                # fire rule is about to see (ready ⊆ inputs_ready)
+                ir = _node_inputs_ready(opcode, in_idx, full, val)
             ready, z, consume, produce = fire_rule(full, val)
             pvals = jnp.stack([z, z], axis=1)        # [N,2,*ts]
 
@@ -969,6 +1110,20 @@ class DataflowEngine:
             full = full.at[FULL_PAD].set(True)
             full = full.at[EMPTY_PAD].set(False)
             full = jnp.where(const_mask, True, full)
+
+            if profile:
+                # occupancy sample point: post-fire, pre-drain — a
+                # produced output token counts busy the cycle it exists
+                occ = full.astype(jnp.int32).at[FULL_PAD].set(0) \
+                          .at[EMPTY_PAD].set(0)
+                prof_upd = dict(
+                    nf=s["nf"] + ready,
+                    si=s["si"] + ~ir,
+                    so=s["so"] + (ir & ~ready),
+                    ab=s["ab"] + occ,
+                    ahw=jnp.maximum(s["ahw"], occ))
+            else:
+                prof_upd = {}
 
             # --- 3. environment drains output buses ----------------------
             if len(p["output_arcs"]):
@@ -989,7 +1144,7 @@ class DataflowEngine:
                 out_count=out_count, cycles=s["cycles"] + 1,
                 fired=s["fired"] + n_fired,
                 last_prog=jnp.where(prog, s["cycles"] + 1, s["last_prog"]),
-                progress=prog)
+                progress=prog, **prof_upd)
 
         def block(s):
             # K fused cycles per while_loop iteration; quiescence is only
@@ -1015,6 +1170,12 @@ class DataflowEngine:
         # exactly the per-cycle reference count, regardless of block
         # overrun past quiescence.
         cycles = jnp.minimum(s["last_prog"] + 1, max_cycles)
+        if profile:
+            # counters cover every SIMULATED cycle (s["cycles"]): block
+            # overrun past quiescence adds idle cycles that fire nothing
+            return (s["out_last"], s["out_count"], cycles, s["fired"],
+                    s["nf"], s["si"], s["so"], s["ab"], s["ahw"],
+                    s["cycles"])
         return s["out_last"], s["out_count"], cycles, s["fired"]
 
 
@@ -1087,22 +1248,25 @@ def _alu_numpy(op, a, b, dtype):
 
 
 def run_reference(graph: Graph, feeds=None, token_shape=(), dtype=np.int32,
-                  max_cycles: int = 100_000, trace=None) -> EngineResult:
+                  max_cycles: int = 100_000, trace=None,
+                  profile: bool = False) -> EngineResult:
     """Slow, obviously-correct mirror of :class:`DataflowEngine`.
 
     trace: optional callback receiving (cycle, node_index, value) for
     every firing — used e.g. to extract pipeline schedules
-    (core/pipeline.py).  One errstate for the whole run: integer
+    (core/pipeline.py).  profile=True additionally accumulates the
+    DESIGN.md §12 fabric counters (the oracle for the device backends'
+    profiled runs).  One errstate for the whole run: integer
     wraparound / float specials are the ALU contract (see
     :func:`alu_numpy`), and entering a context manager per firing
     would tax the per-node python loop."""
     with np.errstate(all="ignore"):
         return _run_reference(graph, feeds, token_shape, dtype,
-                              max_cycles, trace)
+                              max_cycles, trace, profile)
 
 
 def _run_reference(graph, feeds, token_shape, dtype, max_cycles,
-                   trace) -> EngineResult:
+                   trace, profile=False) -> EngineResult:
     p = _plan(graph)
     feeds = {a: np.asarray(v, dtype).reshape(-1, *token_shape)
              if np.asarray(v).ndim == 1 and token_shape == ()
@@ -1130,6 +1294,25 @@ def _run_reference(graph, feeds, token_shape, dtype, max_cycles,
 
     def truthy(v):
         return np.asarray(v).ravel()[0] != 0
+
+    N = len(graph.nodes)
+    if profile:
+        nf = np.zeros((N,), np.int64)
+        si = np.zeros((N,), np.int64)
+        so = np.zeros((N,), np.int64)
+        ab = np.zeros((len(p["arcs"]),), np.int64)
+        ahw = np.zeros((len(p["arcs"]),), np.int64)
+
+    def inputs_ready(n, sfull, sval):
+        """Mirror of :func:`_node_inputs_ready` on the dict registers."""
+        i = n.inputs
+        if n.op == Op.NDMERGE:
+            return sfull[i[0]] or sfull[i[1]]
+        if n.op == Op.DMERGE:
+            if not sfull[i[2]]:
+                return False
+            return sfull[i[0]] if truthy(sval[i[2]]) else sfull[i[1]]
+        return all(sfull[x] for x in i)
 
     cycles = fired = 0
     progress = True
@@ -1184,6 +1367,20 @@ def _run_reference(graph, feeds, token_shape, dtype, max_cycles,
             progress = True
         for a in graph.consts:
             full[a] = True
+        if profile:
+            fired_set = {n_idx for n_idx, _, _ in plans}
+            for n_idx, n in enumerate(graph.nodes):
+                if n_idx in fired_set:
+                    nf[n_idx] += 1
+                elif inputs_ready(n, sfull, sval):
+                    so[n_idx] += 1
+                else:
+                    si[n_idx] += 1
+            # occupancy sample point: post-fire, pre-drain
+            for k, a in enumerate(p["arcs"]):
+                if full[a]:
+                    ab[k] += 1
+                    ahw[k] = 1
         # 3. drain
         for a in p["output_arcs"]:
             if full[a]:
@@ -1192,5 +1389,15 @@ def _run_reference(graph, feeds, token_shape, dtype, max_cycles,
                 full[a] = False
                 progress = True
         cycles += 1
+    prof_obj = node_fires = None
+    if profile:
+        from repro.obs.profile import FabricProfile
+        node_names, arc_names = FabricProfile.names_for(graph)
+        prof_obj = FabricProfile(
+            node_names=node_names, arc_names=arc_names,
+            node_fires=nf, stall_in=si, stall_out=so,
+            arc_busy=ab, arc_hw=ahw, cycles=cycles, dispatches=0)
+        node_fires = nf
     return EngineResult(outputs=out_last, counts=out_count, cycles=cycles,
-                        fired=fired)
+                        fired=fired, node_fires=node_fires,
+                        profile=prof_obj)

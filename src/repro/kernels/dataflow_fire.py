@@ -170,8 +170,10 @@ def _ready_and_z_spec(class_slices, in_idx, out_idx, full, val):
             jnp.concatenate(c_p), jnp.concatenate(p_p))
 
 
-def _fire_body(opcode, in_idx, out_idx, prod_node, prod_slot, cons_node,
-               cons_slot, const_mask, full, val, class_slices=None):
+def _fire_parts(opcode, in_idx, out_idx, prod_node, prod_slot, cons_node,
+                cons_slot, const_mask, full, val, class_slices=None):
+    """Fire step returning the per-node ``ready`` vector (the profiled
+    paths need it; :func:`_fire_body` reduces it to a sum)."""
     ready, z, consume, produce = _ready_and_z(opcode, in_idx, out_idx,
                                               full, val, class_slices)
     # arc-side gather (single producer / single consumer per channel)
@@ -180,8 +182,15 @@ def _fire_body(opcode, in_idx, out_idx, prod_node, prod_slot, cons_node,
     new_full = ((full > 0) & ~consumed) | produced
     new_full = new_full | (const_mask > 0)
     new_val = jnp.where(produced, z[prod_node], val)
-    return (new_full.astype(full.dtype), new_val,
-            ready.astype(jnp.int32).sum())
+    return new_full.astype(full.dtype), new_val, ready
+
+
+def _fire_body(opcode, in_idx, out_idx, prod_node, prod_slot, cons_node,
+               cons_slot, const_mask, full, val, class_slices=None):
+    new_full, new_val, ready = _fire_parts(
+        opcode, in_idx, out_idx, prod_node, prod_slot, cons_node,
+        cons_slot, const_mask, full, val, class_slices)
+    return new_full, new_val, ready.astype(jnp.int32).sum()
 
 
 def _kernel(opcode_ref, in_idx_ref, out_idx_ref, prod_node_ref,
@@ -304,16 +313,21 @@ def block_plan_arrays(graph, optimize: bool = False):
     return t
 
 
-def _env_cycle(tab, feed_vals, feed_len, carry, class_slices=None):
+def _env_cycle(tab, feed_vals, feed_len, carry, class_slices=None,
+               profile=False):
     """One full engine cycle (feed -> fire -> drain), gather-only.
 
     tab: dict of the _TABLE_KEYS arrays.  carry: (full, val, ptr,
-    out_last, out_count, fired, last_prog, cyc).  Ordering matches
+    out_last, out_count, fired, last_prog, cyc) — with ``profile=True``
+    five counter arrays (nf, si, so, ab, ahw; DESIGN.md §12) ride at
+    the end of the carry and accumulate in-kernel.  Ordering matches
     `repro.core.engine.run_reference` exactly: inputs strobe first, the
-    fire rule sees the post-feed registers, outputs drain post-fire.
+    fire rule sees the post-feed registers, outputs drain post-fire;
+    the occupancy sample point is post-fire, pre-drain.
     class_slices selects the opcode-specialized fire rule.
     """
-    full, val, ptr, out_last, out_count, fired, last_prog, cyc = carry
+    (full, val, ptr, out_last, out_count, fired, last_prog, cyc,
+     *prof) = carry
     L = feed_vals.shape[1]
     # 1. strobe environment input buses (pad row: feed_len 0, never fires)
     can_feed = (full[tab["in_arc_idx"]] == 0) & (ptr < feed_len)
@@ -326,10 +340,19 @@ def _env_cycle(tab, feed_vals, feed_len, carry, class_slices=None):
     full = jnp.where(fed_arc, 1, full)
     ptr = ptr + can_feed.astype(ptr.dtype)
     # 2. fire every ready node
-    full, val, n_fired = _fire_body(
+    if profile:
+        from repro.core.engine import _node_inputs_ready
+        ir = _node_inputs_ready(tab["opcode"], tab["in_idx"], full, val)
+    full, val, ready = _fire_parts(
         tab["opcode"], tab["in_idx"], tab["out_idx"], tab["prod_node"],
         tab["prod_slot"], tab["cons_node"], tab["cons_slot"],
         tab["const_mask"], full, val, class_slices)
+    n_fired = ready.astype(jnp.int32).sum()
+    if profile:
+        nf, si, so, ab, ahw = prof
+        occ = (full > 0).astype(jnp.int32)
+        prof = (nf + ready, si + ~ir, so + (ir & ~ready),
+                ab + occ, jnp.maximum(ahw, occ))
     # 3. environment drains output buses
     got = full[tab["out_arc_idx"]] > 0
     out_last = jnp.where(got, val[tab["out_arc_idx"]], out_last)
@@ -337,25 +360,31 @@ def _env_cycle(tab, feed_vals, feed_len, carry, class_slices=None):
     full = jnp.where(tab["out_mask"] > 0, 0, full)
     progress = jnp.any(can_feed) | (n_fired > 0) | jnp.any(got)
     return (full, val, ptr, out_last, out_count, fired + n_fired,
-            jnp.where(progress, cyc + 1, last_prog), cyc + 1)
+            jnp.where(progress, cyc + 1, last_prog), cyc + 1, *prof)
 
 
 def _block_body(tab, feed_vals, feed_len, full, val, ptr, out_last,
-                out_count, n_cycles: int, class_slices=None):
+                out_count, n_cycles: int, class_slices=None, prof=None):
     """Run `n_cycles` engine cycles; pure jnp (shared by kernel + ref).
 
     Returns (full, val, ptr, out_last, out_count, fired, last_prog)
     where fired counts firings within this block and last_prog is the
     1-based relative index of the last cycle that made progress (0 if
     the whole block was idle).  last_prog < n_cycles implies the fabric
-    is quiescent — idle is absorbing."""
+    is quiescent — idle is absorbing.  ``prof`` (optional tuple of the
+    5 §12 counter arrays) rides the carry and is returned after
+    last_prog — counters accumulate across blocks because the caller
+    passes the previous block's counters back in."""
+    profile = prof is not None
     carry = (full, val, ptr, out_last, out_count,
-             jnp.int32(0), jnp.int32(0), jnp.int32(0))
+             jnp.int32(0), jnp.int32(0), jnp.int32(0),
+             *(prof if profile else ()))
     carry = jax.lax.fori_loop(
         0, n_cycles,
-        lambda i, c: _env_cycle(tab, feed_vals, feed_len, c, class_slices),
+        lambda i, c: _env_cycle(tab, feed_vals, feed_len, c, class_slices,
+                                profile=profile),
         carry)
-    return carry[:7]
+    return carry[:7] + tuple(carry[8:])
 
 
 def _block_kernel(n_cycles, class_slices, *refs):
@@ -396,6 +425,49 @@ def _batched_block_kernel(n_cycles, class_slices, *refs):
     outs[6][0, 0] = res[6]
 
 
+def _block_kernel_prof(n_cycles, class_slices, *refs):
+    """Profiled :func:`_block_kernel`: 5 extra in-refs carry the §12
+    counter arrays in and 5 extra out-refs carry them out, accumulated
+    across the K in-kernel cycles — profiling adds zero extra
+    dispatches, only wider block I/O."""
+    ins, outs = refs[:24], refs[24:]
+    tab = {k: r[...] for k, r in zip(_TABLE_KEYS, ins[:12])}
+    feed_vals, feed_len = ins[12][...], ins[13][...]
+    state = [r[...] for r in ins[14:19]]
+    prof = tuple(r[...] for r in ins[19:24])
+    res = _block_body(tab, feed_vals, feed_len, *state, n_cycles=n_cycles,
+                      class_slices=class_slices, prof=prof)
+    for r, v in zip(outs[:5], res[:5]):
+        r[...] = v
+    outs[5][0] = res[5]
+    outs[6][0] = res[6]
+    for r, v in zip(outs[7:12], res[7:12]):
+        r[...] = v
+
+
+def _batched_block_kernel_prof(n_cycles, class_slices, *refs):
+    """Profiled :func:`_batched_block_kernel` — an inactive slot's
+    counters pass through untouched (a parked slot accrues no stalls)."""
+    ins, outs = refs[:25], refs[25:]
+    tab = {k: r[...] for k, r in zip(_TABLE_KEYS, ins[:12])}
+    feed_vals, feed_len = ins[12][0], ins[13][0]
+    state = [r[0] for r in ins[14:19]]
+    active = ins[19][0] != 0
+    prof = tuple(r[0] for r in ins[20:25])
+    res = jax.lax.cond(
+        active,
+        lambda: _block_body(tab, feed_vals, feed_len, *state,
+                            n_cycles=n_cycles, class_slices=class_slices,
+                            prof=prof),
+        lambda: (*state, jnp.int32(0), jnp.int32(0), *prof))
+    for r, v in zip(outs[:5], res[:5]):
+        r[...] = v[None]
+    outs[5][0, 0] = res[5]
+    outs[6][0, 0] = res[6]
+    for r, v in zip(outs[7:12], res[7:12]):
+        r[...] = v[None]
+
+
 def _whole(x):
     """BlockSpec covering the whole (broadcast) array, any grid arity."""
     nd = x.ndim
@@ -404,33 +476,49 @@ def _whole(x):
 
 def fire_block_pallas(tables, feed_vals, feed_len, full, val, ptr,
                       out_last, out_count, *, n_cycles: int,
-                      interpret=None):
+                      prof=None, interpret=None):
     """K fused engine cycles (environment included) via one pallas_call.
 
     tables: block_plan_arrays() output (jnp or numpy arrays).
     feed_vals[n_in, L] int32, feed_len[n_in] int32.
     State: full/val[A2], ptr[n_in], out_last/out_count[n_out], int32.
     Returns (full', val', ptr', out_last', out_count', fired[1],
-    last_prog[1])."""
+    last_prog[1]).  prof: optional 5-tuple of §12 counter arrays
+    (nf/si/so[N2], ab/ahw[A2] int32) — accumulated in-kernel and
+    returned after last_prog."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     tabs = [jnp.asarray(tables[k]) for k in _TABLE_KEYS]
     state = [full, val, ptr, out_last, out_count]
     out_sd = ([jax.ShapeDtypeStruct(x.shape, jnp.int32) for x in state]
               + [jax.ShapeDtypeStruct((1,), jnp.int32)] * 2)
+    if prof is None:
+        return pl.pallas_call(
+            functools.partial(_block_kernel, n_cycles,
+                              tables.get("class_slices")),
+            in_specs=[_whole(x)
+                      for x in (*tabs, feed_vals, feed_len, *state)],
+            out_specs=[_whole(s) for s in out_sd],
+            out_shape=out_sd,
+            interpret=interpret,
+        )(*tabs, feed_vals, feed_len, *state)
+    prof = list(prof)
+    out_sd = out_sd + [jax.ShapeDtypeStruct(x.shape, jnp.int32)
+                       for x in prof]
     return pl.pallas_call(
-        functools.partial(_block_kernel, n_cycles,
+        functools.partial(_block_kernel_prof, n_cycles,
                           tables.get("class_slices")),
-        in_specs=[_whole(x) for x in (*tabs, feed_vals, feed_len, *state)],
+        in_specs=[_whole(x)
+                  for x in (*tabs, feed_vals, feed_len, *state, *prof)],
         out_specs=[_whole(s) for s in out_sd],
         out_shape=out_sd,
         interpret=interpret,
-    )(*tabs, feed_vals, feed_len, *state)
+    )(*tabs, feed_vals, feed_len, *state, *prof)
 
 
 def fire_block_batched_pallas(tables, feed_vals, feed_len, full, val, ptr,
                               out_last, out_count, *, n_cycles: int,
-                              active=None, interpret=None):
+                              active=None, prof=None, interpret=None):
     """Batched block step: grid=(B,) — B independent streams through one
     fabric in a single dispatch.  All state/feed arrays carry a leading
     batch axis; the node/arc tables are shared (broadcast) across the
@@ -438,7 +526,10 @@ def fire_block_batched_pallas(tables, feed_vals, feed_len, full, val, ptr,
     clock gate: slots with active==0 skip the whole block (state frozen,
     fired/last_prog = 0), so a serving layer can park quiesced slots
     without a global barrier.  Returns the same tuple as
-    fire_block_pallas with a leading B axis (fired/last_prog: [B, 1])."""
+    fire_block_pallas with a leading B axis (fired/last_prog: [B, 1]).
+    prof: optional 5-tuple of per-stream §12 counter arrays
+    ([B, N2] / [B, A2] int32), accumulated in-kernel per active stream
+    and returned after last_prog."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     B = full.shape[0]
@@ -454,14 +545,30 @@ def fire_block_batched_pallas(tables, feed_vals, feed_len, full, val, ptr,
 
     out_sd = ([jax.ShapeDtypeStruct(x.shape, jnp.int32) for x in state]
               + [jax.ShapeDtypeStruct((B, 1), jnp.int32)] * 2)
+    if prof is None:
+        return pl.pallas_call(
+            functools.partial(_batched_block_kernel, n_cycles,
+                              tables.get("class_slices")),
+            grid=(B,),
+            in_specs=[_whole(x) for x in tabs]
+            + [row(x) for x in (feed_vals, feed_len, *state)]
+            + [pl.BlockSpec((1,), lambda b: (b,))],
+            out_specs=[row(s) for s in out_sd],
+            out_shape=out_sd,
+            interpret=interpret,
+        )(*tabs, feed_vals, feed_len, *state, active)
+    prof = list(prof)
+    out_sd = out_sd + [jax.ShapeDtypeStruct(x.shape, jnp.int32)
+                       for x in prof]
     return pl.pallas_call(
-        functools.partial(_batched_block_kernel, n_cycles,
+        functools.partial(_batched_block_kernel_prof, n_cycles,
                           tables.get("class_slices")),
         grid=(B,),
         in_specs=[_whole(x) for x in tabs]
         + [row(x) for x in (feed_vals, feed_len, *state)]
-        + [pl.BlockSpec((1,), lambda b: (b,))],
+        + [pl.BlockSpec((1,), lambda b: (b,))]
+        + [row(x) for x in prof],
         out_specs=[row(s) for s in out_sd],
         out_shape=out_sd,
         interpret=interpret,
-    )(*tabs, feed_vals, feed_len, *state, active)
+    )(*tabs, feed_vals, feed_len, *state, active, *prof)

@@ -56,7 +56,8 @@ def make_fire_step(graph):
 
 
 def make_block_step(graph, n_cycles: int, batched: bool = False,
-                    tables=None, optimize: bool = False):
+                    tables=None, optimize: bool = False,
+                    profile: bool = False):
     """Compile the fused K-cycle fire-block kernel for a fabric.
 
     Returns (tables, jitted step).  Single-stream step signature:
@@ -71,18 +72,37 @@ def make_block_step(graph, n_cycles: int, batched: bool = False,
     semantics.  Pass a prior call's `tables` to reuse the plan instead
     of rebuilding it; ``optimize=True`` builds opcode-class-specialized
     tables (ignored when `tables` is given — the tables carry their own
-    ``class_slices``)."""
+    ``class_slices``).  With profile=True the step takes five trailing
+    §12 counter arrays (nf, si, so, ab, ahw — per-stream rows when
+    batched) and returns them, accumulated in-kernel, after last_prog:
+    profiling adds zero extra dispatches."""
     if tables is None:
         tables = block_plan_arrays(graph, optimize=optimize)
     jt = _device_tables(tables)
 
     if batched:
+        if profile:
+            @jax.jit
+            def step(feed_vals, feed_len, full, val, ptr, out_last,
+                     out_count, active, nf, si, so, ab, ahw):
+                return fire_block_batched_pallas(
+                    jt, feed_vals, feed_len, full, val, ptr, out_last,
+                    out_count, n_cycles=n_cycles, active=active,
+                    prof=(nf, si, so, ab, ahw))
+        else:
+            @jax.jit
+            def step(feed_vals, feed_len, full, val, ptr, out_last,
+                     out_count, active):
+                return fire_block_batched_pallas(
+                    jt, feed_vals, feed_len, full, val, ptr, out_last,
+                    out_count, n_cycles=n_cycles, active=active)
+    elif profile:
         @jax.jit
         def step(feed_vals, feed_len, full, val, ptr, out_last, out_count,
-                 active):
-            return fire_block_batched_pallas(
+                 nf, si, so, ab, ahw):
+            return fire_block_pallas(
                 jt, feed_vals, feed_len, full, val, ptr, out_last,
-                out_count, n_cycles=n_cycles, active=active)
+                out_count, n_cycles=n_cycles, prof=(nf, si, so, ab, ahw))
     else:
         @jax.jit
         def step(feed_vals, feed_len, full, val, ptr, out_last, out_count):

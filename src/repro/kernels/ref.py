@@ -30,15 +30,19 @@ def fire_step_ref(tables, full, val):
 
 
 def fire_block_ref(tables, feed_vals, feed_len, full, val, ptr, out_last,
-                   out_count, *, n_cycles: int):
+                   out_count, *, n_cycles: int, prof=None):
     """Same math as the fused block kernel, plain jnp (no pallas_call).
-    Also the vmap target for the batched-stream path."""
+    Also the vmap target for the batched-stream path.  ``prof`` is an
+    optional 5-tuple of §12 counter arrays (nf, si, so, ab, ahw); when
+    given the return tuple gains the accumulated counters after
+    last_prog."""
     tab = {k: jnp.asarray(tables[k]) for k in _TABLE_KEYS}
     return _block_body(tab, jnp.asarray(feed_vals), jnp.asarray(feed_len),
                        full, val, ptr, out_last, out_count,
                        n_cycles=n_cycles,
                        class_slices=tables.get("class_slices")
-                       if hasattr(tables, "get") else None)
+                       if hasattr(tables, "get") else None,
+                       prof=prof)
 
 
 def fire_block_masked_ref(tables, feed_vals, feed_len, full, val, ptr,
@@ -55,3 +59,23 @@ def fire_block_masked_ref(tables, feed_vals, feed_len, full, val, ptr,
     old = (full, val, ptr, out_last, out_count)
     kept = tuple(jnp.where(keep, n, o) for n, o in zip(res[:5], old))
     return (*kept, jnp.where(keep, res[5], 0), jnp.where(keep, res[6], 0))
+
+
+def fire_block_masked_prof_ref(tables, feed_vals, feed_len, full, val, ptr,
+                               out_last, out_count, active, nf, si, so, ab,
+                               ahw, *, n_cycles: int):
+    """Profiled variant of fire_block_masked_ref: threads the §12 fabric
+    counters (nf, si, so, ab, ahw) through the block and returns them
+    after last_prog.  Clock-gated slots (active == 0) keep their old
+    counters untouched — their block never happened, so the per-slot
+    partition invariant nf+si+so == profiled-cycles holds."""
+    prof = (nf, si, so, ab, ahw)
+    res = fire_block_ref(tables, feed_vals, feed_len, full, val, ptr,
+                         out_last, out_count, n_cycles=n_cycles, prof=prof)
+    keep = active != 0
+    old = (full, val, ptr, out_last, out_count)
+    kept = tuple(jnp.where(keep, n, o) for n, o in zip(res[:5], old))
+    kept_prof = tuple(jnp.where(keep, n, o)
+                      for n, o in zip(res[7:12], prof))
+    return (*kept, jnp.where(keep, res[5], 0), jnp.where(keep, res[6], 0),
+            *kept_prof)

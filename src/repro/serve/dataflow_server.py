@@ -88,7 +88,8 @@ from repro.core.engine import (BACKENDS, DataflowEngine, run_reference)
 from repro.core.graph import Graph
 from repro.serve.admission import (POLICIES, DroppedError, FairQueue,
                                    QueueFullError, Rejected)
-from repro.serve.types import Request, RequestMetrics, Result
+from repro.serve.types import (InvalidRequestError, Request,
+                               RequestMetrics, Result)
 
 log = logging.getLogger(__name__)
 
@@ -114,15 +115,18 @@ def cached_engine(graph: Graph, *, backend: str = "xla",
                   block_cycles: int = 16,
                   max_cycles: int = 100_000,
                   token_shape: tuple = (), dtype=np.int32,
-                  optimize: bool = False) -> DataflowEngine:
+                  optimize: bool = False,
+                  profile: bool = False) -> DataflowEngine:
     """Engine for (graph signature, backend, K, token_shape, dtype,
-    optimize) — compiled once, shared by every server/request that
-    presents the same fabric (the cache key hashes the signature, not
-    the graph object, so structurally equal graphs share).
+    optimize, profile) — compiled once, shared by every server/request
+    that presents the same fabric (the cache key hashes the signature,
+    not the graph object, so structurally equal graphs share).
 
-    token_shape/dtype/optimize are part of the key: two servers over
-    the same fabric signature with different token shapes or opt flags
-    compile to different plans and must not collide on one engine."""
+    token_shape/dtype/optimize/profile are part of the key: two servers
+    over the same fabric signature with different token shapes or opt
+    flags compile to different plans and must not collide on one
+    engine (a profiled engine threads §12 counter state through every
+    step, so it cannot share dispatch plans with an unprofiled one)."""
     if backend not in BACKENDS:
         raise ValueError(f"backend {backend!r} not in {BACKENDS}")
     token_shape = tuple(int(d) for d in token_shape)
@@ -130,7 +134,7 @@ def cached_engine(graph: Graph, *, backend: str = "xla",
         else np.dtype(dtype)
     key = (hashlib.sha256(graph_signature(graph).encode()).hexdigest(),
            backend, int(block_cycles), int(max_cycles),
-           token_shape, dtype.str, bool(optimize))
+           token_shape, dtype.str, bool(optimize), bool(profile))
     eng = _ENGINE_CACHE.get(key)
     if eng is None:
         CACHE_STATS["misses"] += 1
@@ -138,7 +142,8 @@ def cached_engine(graph: Graph, *, backend: str = "xla",
                              backend=backend,
                              block_cycles=block_cycles,
                              max_cycles=max_cycles,
-                             optimize=optimize)
+                             optimize=optimize,
+                             profile=profile)
         _ENGINE_CACHE[key] = eng
         while len(_ENGINE_CACHE) > _ENGINE_CACHE_MAX:
             _ENGINE_CACHE.popitem(last=False)
@@ -197,7 +202,8 @@ class DataflowServer:
                  max_queue: int | None = None, policy: str = "reject",
                  wedge_timeout_blocks: int = 32,
                  max_retries: int = 3, retry_backoff_s: float = 0.0,
-                 faults=None):
+                 faults=None, profile: bool = False,
+                 trace=None, metrics=None):
         if slots < 1:
             raise ValueError("slots must be >= 1")
         if policy not in POLICIES:
@@ -215,6 +221,21 @@ class DataflowServer:
         self.max_retries = int(max_retries)
         self.retry_backoff_s = float(retry_backoff_s)
         self.faults = faults
+        # observability (DESIGN.md §12): profile=True compiles §12
+        # fabric counters into every slot step, so each harvested
+        # Result carries result.engine.profile (a FabricProfile);
+        # trace/metrics accept a repro.obs TraceRecorder /
+        # MetricsRegistry (or None: zero recording overhead).
+        self.profile = bool(profile)
+        self.trace = trace
+        self.metrics = metrics
+        self._gauged_tenants: set[str] = set()
+        if faults is not None and trace is not None \
+                and getattr(faults, "notify", None) is None:
+            # injected faults land on the trace timeline next to the
+            # lifecycle events they cause
+            faults.notify = lambda kind, *key: self._trace(
+                "fault", injected=kind, key=list(map(str, key)))
         self._block_cycles = int(block_cycles)
         self._optimize = bool(optimize)
         self._input_arcs = tuple(graph.input_arcs())
@@ -226,6 +247,7 @@ class DataflowServer:
         self._queued_at: dict[int, int] = {}     # uid -> block at submit
         self._resident: dict[int, tuple[Request, int]] = {}  # slot -> (req, admitted)
         self._retries: dict[int, int] = {}       # uid -> dispatch retries
+        self._wedge_traced: set[int] = set()     # first-wedge trace dedupe
         self._degraded_uids: set[int] = set()    # restarted by degradation
         self._done: list[Result] = []  # results finished out-of-band
         #                                (drops, blocking-submit pumps)
@@ -245,6 +267,7 @@ class DataflowServer:
             self._primary_backend = engine.backend
             self.engine = engine
             self.max_cycles = engine.max_cycles
+            self.profile = bool(engine.profile)  # the engine decides
         else:
             if backend not in BACKENDS:
                 raise ValueError(f"backend {backend!r} not in {BACKENDS}")
@@ -265,7 +288,8 @@ class DataflowServer:
                     # compile differently
                     self.engine = cached_engine(
                         graph, backend=be, block_cycles=block_cycles,
-                        max_cycles=max_cycles, optimize=optimize)
+                        max_cycles=max_cycles, optimize=optimize,
+                        profile=self.profile)
                     break
                 except Exception as e:
                     self._log_event("compile-degrade", backend=be,
@@ -283,6 +307,50 @@ class DataflowServer:
         ev = dict(kind=kind, block=self.block, **kw)
         self.events.append(ev)
         log.warning("dataflow-server %s: %s", kind, kw)
+
+    # -- observability plumbing (no-ops when trace/metrics are None) ----
+    def _trace(self, kind: str, *, uid=None, slot=None, tenant=None,
+               status=None, block=None, **args) -> None:
+        """Record one lifecycle event at the server's block clock (or an
+        explicit ``block`` when the event's RequestMetrics timestamp
+        differs, e.g. the reference path's finished_block)."""
+        if self.trace is not None:
+            self.trace.record(
+                kind, block=self.block if block is None else block,
+                uid=uid, slot=slot,
+                tenant=None if tenant is None else str(tenant),
+                status=status, **args)
+
+    def _count(self, name: str, n: int = 1, **labels) -> None:
+        if self.metrics is not None:
+            self.metrics.counter(name, **labels).inc(n)
+
+    def _update_queue_metrics(self) -> None:
+        if self.metrics is None:
+            return
+        self.metrics.gauge("queue_depth").set(len(self.queue))
+        depths = {str(t): d for t, d in self.queue.depths().items()}
+        self._gauged_tenants |= set(depths)
+        for t in self._gauged_tenants:
+            self.metrics.gauge("queue_depth", tenant=t).set(
+                depths.get(t, 0))
+
+    def _observe_result(self, res: Result) -> Result:
+        """Per-request terminal accounting — every Result passes
+        through here exactly once, whichever path produced it."""
+        if self.metrics is None:
+            return res
+        self._count("requests_finished", status=res.status)
+        m = res.metrics
+        if m is not None:
+            self.metrics.histogram("queue_wait_blocks").observe(
+                m.queue_wait_blocks)
+            if m.residency_cycles:
+                self.metrics.histogram("residency_cycles").observe(
+                    m.residency_cycles)
+            if m.backend:
+                self._count("requests_served", backend=m.backend)
+        return res
 
     @property
     def backend(self) -> str:
@@ -346,6 +414,19 @@ class DataflowServer:
         if not isinstance(request, Request):
             raise TypeError(f"submit wants a Request or feeds dict, "
                             f"got {type(request).__name__}")
+        # field validation (typed): a deadline or cycle budget below 1
+        # could never run — deadline_blocks=0 would expire on the very
+        # heartbeat that admits it, max_cycles=0 would truncate a slot
+        # before its first cycle
+        if request.deadline_blocks is not None \
+                and request.deadline_blocks < 1:
+            raise InvalidRequestError(
+                f"request {request.uid}: deadline_blocks must be >= 1, "
+                f"got {request.deadline_blocks}")
+        if request.max_cycles is not None and request.max_cycles < 1:
+            raise InvalidRequestError(
+                f"request {request.uid}: max_cycles must be >= 1, "
+                f"got {request.max_cycles}")
         if request.feeds is None:
             raise ValueError(f"request {request.uid} has no feeds — the "
                              "dataflow server serves feed-stream requests")
@@ -369,6 +450,11 @@ class DataflowServer:
         # bounded admission (DESIGN.md §11)
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             if self.policy == "reject":
+                self._trace("reject", uid=request.uid,
+                            tenant=request.tenant,
+                            queue_depth=len(self.queue))
+                self._count("requests_rejected",
+                            tenant=str(request.tenant))
                 return Rejected(uid=request.uid,
                                 reason=f"queue full ({self.max_queue})",
                                 queue_depth=len(self.queue),
@@ -379,13 +465,16 @@ class DataflowServer:
                 self._retries.pop(victim.uid, None)
                 self._log_event("drop-oldest", uid=victim.uid,
                                 tenant=victim.tenant)
-                self._done.append(Result(
+                self._trace("drop", uid=victim.uid, tenant=victim.tenant,
+                            status="error")
+                self._count("requests_dropped", tenant=str(victim.tenant))
+                self._done.append(self._observe_result(Result(
                     uid=victim.uid,
                     error=DroppedError(
                         f"request {victim.uid} dropped by admission "
                         f"(queue full at {self.max_queue}, "
                         f"policy=drop-oldest)"),
-                    metrics=self._queue_only_metrics(queued)))
+                    metrics=self._queue_only_metrics(queued))))
             else:       # "block": the submitting host pumps heartbeats
                 guard = 0
                 while len(self.queue) >= self.max_queue:
@@ -400,10 +489,16 @@ class DataflowServer:
                                           np.int32)
             if poisoned is not request.feeds:
                 self._log_event("poison", uid=request.uid)
+                self._trace("poison", uid=request.uid,
+                            tenant=request.tenant)
                 request = dataclasses.replace(request, feeds=poisoned)
         self.queue.push(request)
         self._queued_at[request.uid] = self.block
         self.max_queue_depth = max(self.max_queue_depth, len(self.queue))
+        self._trace("submit", uid=request.uid, tenant=request.tenant,
+                    queue_depth=len(self.queue))
+        self._count("requests_submitted", tenant=str(request.tenant))
+        self._update_queue_metrics()
         return request.uid
 
     def _queue_only_metrics(self, queued: int,
@@ -431,6 +526,11 @@ class DataflowServer:
             self.admission_rounds += 1
             for b, r in batch:
                 self._resident[b] = (r, self.block)
+                self._trace("admit", uid=r.uid, slot=b, tenant=r.tenant,
+                            queue_wait_blocks=self.block
+                            - self._queued_at[r.uid])
+                self._count("requests_admitted", tenant=str(r.tenant))
+            self._update_queue_metrics()
 
     # -- heartbeat ------------------------------------------------------
     def step(self) -> list[Result]:
@@ -482,6 +582,7 @@ class DataflowServer:
             self._degrade(e)
             return results
         self.block += 1
+        self._count("dispatches", backend=self.engine.backend)
         # 4. harvest quiesced slots; a fault-wedged request's quiescence
         #    signal is suppressed (the slot stalls until the watchdog)
         done = self.state.quiesced_slots()
@@ -490,6 +591,13 @@ class DataflowServer:
                       if self.faults.wedge(self._resident[b][0].uid)]
             for b in wedged:
                 self.state.quiesced[b] = False
+                req = self._resident[b][0]
+                if req.uid not in self._wedge_traced:
+                    # wedging suppresses quiescence every block; trace
+                    # only the first suppression per request
+                    self._wedge_traced.add(req.uid)
+                    self._trace("wedge", uid=req.uid, slot=b,
+                                tenant=req.tenant)
             done = [b for b in done if b not in wedged]
         return results + self._harvest_slots(done)
 
@@ -510,9 +618,13 @@ class DataflowServer:
         for r in expired:
             queued = self._queued_at.pop(r.uid)
             self._retries.pop(r.uid, None)
-            results.append(Result(
+            self._trace("expire", uid=r.uid, tenant=r.tenant,
+                        status="expired", queued_block=queued)
+            results.append(self._observe_result(Result(
                 uid=r.uid,
-                metrics=self._queue_only_metrics(queued, expired=True)))
+                metrics=self._queue_only_metrics(queued, expired=True))))
+        if expired:
+            self._update_queue_metrics()
         return results
 
     def _dispatch_block(self, n_cycles: int):
@@ -539,6 +651,10 @@ class DataflowServer:
                 self._log_event("dispatch-retry", attempt=attempt,
                                 backend=self.engine.backend,
                                 error=repr(e))
+                self._trace("retry", attempt=attempt,
+                            backend=self.engine.backend, error=repr(e))
+                self._count("dispatch_retries",
+                            backend=self.engine.backend)
                 if self.retry_backoff_s > 0.0:
                     time.sleep(self.retry_backoff_s * 2 ** (attempt - 1))
 
@@ -548,7 +664,8 @@ class DataflowServer:
         intact — execution restarts from the feeds, which is
         deterministic) and bring up the next backend in the chain."""
         failed = self.engine.backend
-        victims = [self._resident[b][0] for b in sorted(self._resident)]
+        seats = [(b, self._resident[b][0]) for b in sorted(self._resident)]
+        victims = [req for _, req in seats]
         self._resident.clear()
         for req in reversed(victims):
             self.queue.push_front(req)
@@ -556,6 +673,13 @@ class DataflowServer:
         self.max_queue_depth = max(self.max_queue_depth, len(self.queue))
         self._log_event("degrade", from_backend=failed, error=repr(err),
                         requeued=[r.uid for r in victims])
+        self._trace("degrade", from_backend=failed, error=repr(err))
+        self._count("degradations", from_backend=failed)
+        for b, req in seats:
+            # the requeue closes the victim's slot span on the trace
+            self._trace("requeue", uid=req.uid, slot=b,
+                        tenant=req.tenant, from_backend=failed)
+        self._update_queue_metrics()
         chain = self._chain_from(failed)
         for be in chain[1:] if chain[0] == failed else chain:
             if be == "reference":
@@ -567,7 +691,8 @@ class DataflowServer:
                 self.engine = cached_engine(
                     self.graph, backend=be,
                     block_cycles=self._block_cycles,
-                    max_cycles=self.max_cycles, optimize=self._optimize)
+                    max_cycles=self.max_cycles, optimize=self._optimize,
+                    profile=self.profile)
                 self.state = self.engine.init_state(self.slots)
                 self._log_event("degrade-to", backend=be)
                 return
@@ -601,11 +726,12 @@ class DataflowServer:
             if err is None:
                 try:
                     er = run_reference(self.graph, req.feeds, (),
-                                       np.int32, cap)
+                                       np.int32, cap,
+                                       profile=self.profile)
                     er.dispatches = 1
                 except Exception as e:
                     err = e
-            results.append(Result(
+            res = Result(
                 uid=req.uid, engine=er, error=err,
                 metrics=RequestMetrics(
                     slot=-1, queued_block=queued,
@@ -618,9 +744,17 @@ class DataflowServer:
                     truncated=bool(er and er.cycles >= cap),
                     degraded=self.degraded,
                     retries=self._retries.pop(req.uid, 0),
-                    backend="reference")))
+                    backend="reference"))
+            # slot == -1: reference requests never open a slot span, so
+            # the harvest is an instant + tenant-span close only; the
+            # block stamp matches metrics.finished_block
+            self._trace("harvest", uid=req.uid, slot=-1,
+                        tenant=req.tenant, status=res.status,
+                        block=self.block + 1, backend="reference")
+            results.append(self._observe_result(res))
         if results:
             self.block += 1
+            self._update_queue_metrics()
         return results
 
     def _harvest_slots(self, done: list[int],
@@ -635,7 +769,8 @@ class DataflowServer:
             # accounting; a silent fallback here would mask the very
             # bookkeeping bug it pretends to tolerate
             queued = self._queued_at.pop(req.uid)
-            results.append(Result(
+            self._wedge_traced.discard(req.uid)
+            res = Result(
                 uid=req.uid, engine=er,
                 metrics=RequestMetrics(
                     slot=b, queued_block=queued, admitted_block=admitted,
@@ -650,7 +785,12 @@ class DataflowServer:
                     degraded=(req.uid in self._degraded_uids
                               or self.degraded),
                     retries=self._retries.pop(req.uid, 0),
-                    backend=self.engine.backend)))
+                    backend=self.engine.backend))
+            self._trace("harvest", uid=req.uid, slot=b, tenant=req.tenant,
+                        status=res.status, cycles=er.cycles,
+                        fired=er.fired, tokens_out=res.metrics.tokens_out,
+                        backend=self.engine.backend)
+            results.append(self._observe_result(res))
         return results
 
     def drain(self) -> list[Result]:

@@ -97,6 +97,16 @@ class FaultPlan:
         self.poison_rate = float(poison_rate)
         self.reference_fail_uids = frozenset(reference_fail_uids)
         self.log: list[tuple] = []      # (kind, *key) of every injection
+        # observability hook: called as notify(kind, *key) on every
+        # injection (after it lands in ``log``).  The server points this
+        # at its TraceRecorder so injected faults show up on the trace
+        # timeline next to the lifecycle events they cause.
+        self.notify = None
+
+    def _emit(self, kind: str, *key) -> None:
+        self.log.append((kind, *key))
+        if self.notify is not None:
+            self.notify(kind, *key)
 
     # -- the deterministic coin ----------------------------------------
     def _u(self, *key) -> float:
@@ -107,7 +117,7 @@ class FaultPlan:
     # -- injection points ----------------------------------------------
     def check_compile(self, backend: str) -> None:
         if backend in self.compile_fail:
-            self.log.append(("compile", backend))
+            self._emit("compile", backend)
             raise CompileFault(
                 f"injected compile failure for backend {backend!r}")
 
@@ -118,7 +128,7 @@ class FaultPlan:
         persistent backends never clear (forcing degradation)."""
         if (backend in self.persistent_backends
                 and block >= self.persistent_from_block):
-            self.log.append(("dispatch-persistent", backend, block, attempt))
+            self._emit("dispatch-persistent", backend, block, attempt)
             return DispatchFault(
                 f"injected persistent dispatch failure "
                 f"(backend={backend}, block={block})")
@@ -127,7 +137,7 @@ class FaultPlan:
             and self._u("dispatch", backend, block)
             < self.dispatch_fail_rate)
         if transient and attempt < self.transient_attempts:
-            self.log.append(("dispatch-transient", backend, block, attempt))
+            self._emit("dispatch-transient", backend, block, attempt)
             return DispatchFault(
                 f"injected transient dispatch failure "
                 f"(backend={backend}, block={block}, attempt={attempt})")
@@ -163,12 +173,12 @@ class FaultPlan:
                     arr.flat[0] = info.min
                     arr.flat[-1] = info.max
             out[a] = arr
-        self.log.append(("poison", uid))
+        self._emit("poison", uid)
         return out
 
     def reference_error(self, uid: int) -> Exception | None:
         if uid in self.reference_fail_uids:
-            self.log.append(("reference", uid))
+            self._emit("reference", uid)
             return InjectedFault(
                 f"injected reference-backend failure for request {uid}")
         return None

@@ -25,6 +25,13 @@ import numpy as np
 from repro.core.engine import EngineResult
 
 
+class InvalidRequestError(ValueError):
+    """A request carried an unusable field value (e.g.
+    ``deadline_blocks < 1`` or ``max_cycles < 1``) — raised by
+    ``submit`` before the request touches the queue, so a malformed
+    request can never poison an admission batch or expire instantly."""
+
+
 @dataclasses.dataclass
 class Request:
     """One unit of admission-controlled work.

@@ -1,0 +1,399 @@
+"""Observability layer (DESIGN.md §12, PR 7).
+
+Acceptance properties:
+
+* **Heisenberg-free profiling** — ``DataflowEngine(profile=True)``
+  leaves results bit-identical (outputs / counts / cycles / fired)
+  across backends x K x optimize, adds zero device dispatches, and its
+  per-node fire counts sum exactly to the aggregate ``fired``.
+* **Counter semantics** — the §12 partition invariant holds per node
+  (fires + stall_in + stall_out == profiled cycles), per-arc occupancy
+  respects the depth-1 register bound, and at K=1 every backend's full
+  profile equals the reference oracle's.
+* **Trace round-trip** — the server's TraceRecorder exports Chrome
+  trace JSON that passes the lifecycle validator on both clocks, and
+  its block-clock stamps match ``RequestMetrics`` exactly.
+* **Status / validation** — ``Result.status`` precedence (error >
+  expired > wedged > truncated > ok) and the typed ``submit``
+  validation of ``deadline_blocks`` / ``max_cycles``.
+"""
+import functools
+import itertools
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import library
+from repro.core.engine import DataflowEngine, run_reference
+from repro.obs import (MetricsRegistry, TraceInvariantError, TraceRecorder,
+                       load_chrome, validate_chrome, validate_snapshot)
+from repro.serve.admission import FairQueue
+from repro.serve.dataflow_server import DataflowServer
+from repro.serve.faults import FaultPlan
+from repro.serve.types import (InvalidRequestError, Request, RequestMetrics,
+                               Result)
+
+BACKENDS = ("reference", "xla", "pallas")
+BENCHES = ("vector_sum", "gcd")          # one acyclic + one loop fabric
+KS = (1, 4)
+
+
+@functools.lru_cache(maxsize=None)
+def _bench(name):
+    return library.BENCHES[name]()
+
+
+def _feeds(name, k=6, seed=0):
+    return library.random_feeds(name, _bench(name), k,
+                                np.random.default_rng(seed))
+
+
+@functools.lru_cache(maxsize=None)
+def _run(name, backend, K, profile, optimize=False):
+    eng = DataflowEngine(_bench(name).graph, backend=backend,
+                         block_cycles=K, optimize=optimize,
+                         profile=profile)
+    return eng.run(_feeds(name))
+
+
+def _same_result(got, want, tag):
+    assert got.cycles == want.cycles, tag
+    assert got.fired == want.fired, tag
+    assert got.counts == want.counts, tag
+    for a, c in want.counts.items():
+        if c:
+            np.testing.assert_array_equal(
+                np.asarray(got.outputs[a]), np.asarray(want.outputs[a]),
+                err_msg=str((tag, a)))
+
+
+# ---------------------------------------------------------------------------
+# fabric counters: bit-identity, partition invariant, cross-backend
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", BENCHES)
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("K", KS)
+def test_profiling_does_not_perturb_results(name, backend, K):
+    base = _run(name, backend, K, profile=False)
+    prof = _run(name, backend, K, profile=True)
+    _same_result(prof, base, (name, backend, K))
+    # the unprofiled engine carries no counters at all
+    assert base.profile is None and base.node_fires is None
+    p = prof.profile
+    assert p is not None
+    p.check()                                 # §12 partition invariant
+    assert p.fired == prof.fired == int(p.node_fires.sum())
+    np.testing.assert_array_equal(prof.node_fires, p.node_fires)
+
+
+@pytest.mark.parametrize("name", BENCHES)
+@pytest.mark.parametrize("backend", ("xla", "pallas"))
+def test_profiling_adds_zero_dispatches(name, backend):
+    base = _run(name, backend, 4, profile=False)
+    prof = _run(name, backend, 4, profile=True)
+    assert prof.dispatches == base.dispatches
+    assert prof.profile.dispatches == base.dispatches
+
+
+@pytest.mark.parametrize("name", BENCHES)
+@pytest.mark.parametrize("K", KS)
+def test_node_fires_identical_across_backends(name, K):
+    ref = _run(name, "reference", K, profile=True)
+    for backend in ("xla", "pallas"):
+        got = _run(name, backend, K, profile=True)
+        np.testing.assert_array_equal(
+            got.node_fires, ref.node_fires, err_msg=(name, backend, K))
+
+
+@pytest.mark.parametrize("name", BENCHES)
+def test_k1_profile_equals_reference_oracle(name):
+    """At K=1 the device backends see exactly the cycles the oracle
+    simulates, so the *entire* profile (stall attribution and arc
+    occupancy included) must match bit-for-bit."""
+    ref = _run(name, "reference", 1, profile=True).profile
+    for backend in ("xla", "pallas"):
+        got = _run(name, backend, 1, profile=True).profile
+        for field in ("node_fires", "stall_in", "stall_out",
+                      "arc_busy", "arc_hw"):
+            np.testing.assert_array_equal(
+                getattr(got, field), getattr(ref, field),
+                err_msg=(name, backend, field))
+        assert got.cycles == ref.cycles
+
+
+def test_profile_with_optimize_stays_bit_identical():
+    base = _run("gcd", "xla", 4, profile=False, optimize=True)
+    prof = _run("gcd", "xla", 4, profile=True, optimize=True)
+    _same_result(prof, base, "gcd/xla/opt")
+    prof.profile.check()
+    assert prof.profile.fired == prof.fired
+    # the optimized graph must report fires for the optimized nodes
+    assert len(prof.profile.node_names) == len(prof.node_fires)
+
+
+def test_profile_export_roundtrip(tmp_path):
+    p = _run("vector_sum", "xla", 4, profile=True).profile
+    d = p.to_json()
+    assert d["fired"] == p.fired
+    assert [n["name"] for n in d["nodes"]] == list(p.node_names)
+    path = tmp_path / "prof.json"
+    p.save(str(path))
+    with open(path) as f:
+        assert json.load(f) == d
+    assert "hot[" in p.summary()
+
+
+def test_run_reference_profile_is_free():
+    res = run_reference(_bench("vector_sum").graph, _feeds("vector_sum"),
+                        profile=True)
+    res.profile.check()
+    assert res.profile.dispatches == 0
+    assert res.profile.fired == res.fired
+
+
+# ---------------------------------------------------------------------------
+# server: trace + metrics + per-request profiles
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _served_scenario():
+    """One instrumented serve with every undisputed lifecycle path:
+    ok harvests, a queued expiry, a drop-oldest eviction."""
+    bench = _bench("vector_sum")
+    tr, mr = TraceRecorder(), MetricsRegistry()
+    srv = DataflowServer(bench.graph, slots=2, block_cycles=4,
+                         backend="xla", policy="drop-oldest", max_queue=5,
+                         profile=True, trace=tr, metrics=mr)
+    feeds = {uid: _feeds("vector_sum", k=4 + (uid % 3), seed=uid)
+             for uid in range(1, 7)}
+    for uid, f in feeds.items():
+        srv.submit(Request(uid=uid, feeds=f, tenant="ab"[uid % 2],
+                           deadline_blocks=1 if uid == 5 else None))
+    results = {r.uid: r for r in srv.drain()}
+    return srv, tr, mr, results, feeds
+
+
+def test_scenario_covers_the_lifecycle():
+    srv, tr, mr, results, feeds = _served_scenario()
+    assert sorted(results) == [1, 2, 3, 4, 5, 6]  # every uid answered
+    statuses = {r.status for r in results.values()}
+    assert "ok" in statuses
+    assert "error" in statuses          # uid 1: drop-oldest victim
+    assert results[1].status == "error"
+    assert results[5].status == "expired"
+    kinds = {e.kind for e in tr.events}
+    assert {"submit", "admit", "harvest", "drop", "expire"} <= kinds
+
+
+def test_trace_export_roundtrip_invariants(tmp_path):
+    srv, tr, mr, results, feeds = _served_scenario()
+    for clock in ("block", "wall"):
+        info = validate_chrome(tr.to_chrome(clock))
+        assert info["uids"] == 6 and info["events"] > 0
+    path = tmp_path / "trace.json"
+    tr.save(str(path))
+    assert validate_chrome(load_chrome(str(path)))["uids"] == 6
+
+
+def test_trace_block_stamps_match_request_metrics():
+    srv, tr, mr, results, feeds = _served_scenario()
+    by_uid = {}
+    for ev in tr.events:
+        if ev.uid is not None:
+            by_uid.setdefault(ev.uid, []).append(ev)
+    for uid, res in results.items():
+        m = res.metrics
+        evs = by_uid[uid]
+        submit = [e for e in evs if e.kind == "submit"]
+        assert len(submit) == 1 and submit[0].block == m.queued_block
+        admits = [e for e in evs if e.kind == "admit"]
+        if m.slot >= 0:
+            assert m.admitted_block in [e.block for e in admits]
+        terminal = [e for e in evs
+                    if e.kind in ("harvest", "expire", "drop")]
+        assert len(terminal) == 1
+        assert terminal[0].block == m.finished_block
+        assert terminal[0].status == res.status
+
+
+def test_metrics_snapshot_matches_results():
+    srv, tr, mr, results, feeds = _served_scenario()
+    snap = mr.snapshot()
+    validate_snapshot(snap)
+    c = snap["counters"]
+
+    def total(name):
+        return sum(v for k, v in c.items()
+                   if k == name or k.startswith(name + "{"))
+
+    assert total("requests_submitted") == 6
+    by_status = {}
+    for r in results.values():
+        by_status[r.status] = by_status.get(r.status, 0) + 1
+    for status, n in by_status.items():
+        assert c[f"requests_finished{{status={status}}}"] == n
+    assert total("requests_dropped") == 1
+    assert snap["gauges"]["queue_depth"]["value"] == 0   # drained
+    assert any(k.startswith("queue_wait_blocks")
+               for k in snap["histograms"])
+
+
+def test_server_profile_matches_solo_profiled_run():
+    srv, tr, mr, results, feeds = _served_scenario()
+    eng = DataflowEngine(_bench("vector_sum").graph, backend="xla",
+                         block_cycles=4, profile=True)
+    checked = 0
+    for uid, res in results.items():
+        if res.status != "ok":
+            continue
+        p = res.engine.profile
+        p.check()
+        solo = eng.run(feeds[uid])
+        np.testing.assert_array_equal(p.node_fires, solo.node_fires,
+                                      err_msg=f"uid {uid}")
+        assert p.fired == res.engine.fired == solo.fired
+        checked += 1
+    assert checked >= 2
+
+
+def test_fault_injections_land_in_the_trace():
+    bench = _bench("vector_sum")
+    tr = TraceRecorder()
+    plan = FaultPlan(seed=3, poison_uids=(2,), wedge_uids=(3,),
+                     dispatch_fail_blocks=(1,), transient_attempts=1)
+    srv = DataflowServer(bench.graph, slots=2, block_cycles=4,
+                         backend="xla", wedge_timeout_blocks=3,
+                         faults=plan, trace=tr)
+    for uid in (1, 2, 3):
+        srv.submit(Request(uid=uid, feeds=_feeds("vector_sum", k=4,
+                                                 seed=uid), tenant="t"))
+    results = {r.uid: r for r in srv.drain()}
+    kinds = {e.kind for e in tr.events}
+    assert "fault" in kinds                  # FaultPlan.notify is wired
+    injected = {e.args["injected"] for e in tr.events if e.kind == "fault"}
+    assert {"poison", "dispatch-transient"} <= injected
+    assert "retry" in kinds and "wedge" in kinds
+    assert results[3].status == "wedged"
+    validate_chrome(tr.to_chrome())
+
+
+# ---------------------------------------------------------------------------
+# trace validator: each invariant rejects a violating log
+# ---------------------------------------------------------------------------
+def test_validator_rejects_missing_terminal():
+    # tenant-less so no async span masks the lifecycle check
+    tr = TraceRecorder()
+    tr.record("submit", block=0, uid=1)
+    with pytest.raises(TraceInvariantError, match="terminal"):
+        validate_chrome(tr.to_chrome())
+    # with a tenant the same omission trips the async-balance check
+    tr.record("submit", block=1, uid=2, tenant="t")
+    with pytest.raises(TraceInvariantError):
+        validate_chrome(tr.to_chrome())
+
+
+def test_validator_rejects_backwards_clock():
+    tr = TraceRecorder()
+    tr.record("submit", block=5, uid=1, tenant="t")
+    tr.record("harvest", block=3, uid=1, tenant="t", status="ok")
+    with pytest.raises(TraceInvariantError, match="backwards"):
+        validate_chrome(tr.to_chrome())
+
+
+def test_validator_rejects_unbalanced_slot_span():
+    tr = TraceRecorder()
+    tr.record("submit", block=0, uid=1, tenant="t")
+    tr.record("admit", block=1, uid=1, slot=0, tenant="t")
+    tr.record("expire", block=2, uid=1, tenant="t")   # span never closed
+    with pytest.raises(TraceInvariantError):
+        validate_chrome(tr.to_chrome())
+
+
+def test_validator_rejects_double_submit():
+    tr = TraceRecorder()   # tenant-less: the uid-count check itself fires
+    tr.record("submit", block=0, uid=1)
+    tr.record("submit", block=1, uid=1)
+    tr.record("harvest", block=2, uid=1, status="ok")
+    with pytest.raises(TraceInvariantError, match="submitted"):
+        validate_chrome(tr.to_chrome())
+
+
+def test_validator_rejects_malformed_shape():
+    with pytest.raises(TraceInvariantError):
+        validate_chrome({"traceEvents": [{"ph": "i"}]})
+    with pytest.raises(TraceInvariantError):
+        validate_chrome({"nope": []})
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+def test_metrics_primitives_and_snapshot_validation():
+    mr = MetricsRegistry()
+    mr.counter("reqs").inc(2)
+    mr.counter("reqs", tenant="a").inc(1)
+    mr.gauge("depth").set(7)
+    h = mr.histogram("wait")
+    for v in (0.5, 2.0, 100.0):
+        h.observe(v)
+    snap = mr.snapshot()
+    validate_snapshot(snap)
+    assert snap["counters"]["reqs"] == 2
+    assert snap["counters"]["reqs{tenant=a}"] == 1
+    assert snap["gauges"]["depth"]["value"] == 7
+    hist = snap["histograms"]["wait"]
+    assert hist["count"] == 3 and hist["sum"] == pytest.approx(102.5)
+    with pytest.raises(ValueError):
+        validate_snapshot({"counters": 3})
+
+
+def test_fair_queue_depths():
+    q = FairQueue()
+    for uid, t in [(1, "a"), (2, "a"), (3, "b"), (4, None)]:
+        q.push(Request(uid=uid, feeds={}, tenant=t))
+    assert q.depths() == {"a": 2, "b": 1, None: 1}
+    q.pop()
+    assert q.depths() == {"a": 1, "b": 1, None: 1}
+    for _ in range(3):
+        q.pop()
+    assert q.depths() == {}
+
+
+# ---------------------------------------------------------------------------
+# Result.status precedence + typed submit validation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("err,exp,wed,tru",
+                         list(itertools.product((False, True), repeat=4)))
+def test_status_precedence_table(err, exp, wed, tru):
+    m = RequestMetrics(slot=0, queued_block=0, admitted_block=0,
+                       finished_block=0, queue_wait_blocks=0,
+                       residency_blocks=0, residency_cycles=0,
+                       tokens_out=0, expired=exp, wedged=wed,
+                       truncated=tru)
+    r = Result(uid=1, metrics=m,
+               error=RuntimeError("boom") if err else None)
+    want = ("error" if err else "expired" if exp else
+            "wedged" if wed else "truncated" if tru else "ok")
+    assert r.status == want
+
+
+def test_status_without_metrics():
+    assert Result(uid=1).status == "ok"
+    assert Result(uid=1, error=ValueError("x")).status == "error"
+
+
+@pytest.mark.parametrize("field,bad", [("deadline_blocks", 0),
+                                       ("deadline_blocks", -3),
+                                       ("max_cycles", 0),
+                                       ("max_cycles", -1)])
+def test_submit_validates_request_fields(field, bad):
+    srv = DataflowServer(_bench("vector_sum").graph, slots=1,
+                         block_cycles=4, backend="xla")
+    req = Request(uid=9, feeds=_feeds("vector_sum", k=2), **{field: bad})
+    with pytest.raises(InvalidRequestError, match=field):
+        srv.submit(req)
+    assert issubclass(InvalidRequestError, ValueError)
+    # the boundary value 1 is valid, and uid 9 was never double-queued
+    assert srv.submit(Request(uid=9, feeds=_feeds("vector_sum", k=2),
+                              **{field: 1})) == 9
+    assert [r.uid for r in srv.drain()] == [9]
