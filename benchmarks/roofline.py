@@ -10,6 +10,13 @@ bounded by 0.5 at steady state and a node can fire at most every
 other cycle.  ``cadence_frac`` = hottest node's fires-per-cycle over
 that 0.5 bound — the dataflow analogue of "fraction of peak FLOPs".
 
+The scheduled section (``sched_rows``, from BENCH_opt.json's sched
+records) plots each control-free bench's *scheduled* steady-state
+output cadence — tokens per cycle of the locked period (DESIGN.md
+§13) — against the same 0.5 tokens/cycle handshake bound and the
+dynamic engine's measured output cadence, showing where software-
+pipelined arc registers push throughput past the handshake cadence.
+
 CSV: name,us_per_call,derived  (us_per_call = dominant term in us)
 """
 from __future__ import annotations
@@ -23,6 +30,9 @@ DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
 
 PROFILE_JSON = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_profile.json")
+
+OPT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_opt.json")
 
 # handshake cadence bound: 1 token per 2 cycles per arc (DESIGN.md §2)
 CADENCE_BOUND = 0.5
@@ -74,6 +84,64 @@ def fabric_main(path: str | None = None) -> None:
               f"arc_occ_mean={r['mean_arc_occupancy']}")
 
 
+def sched_rows(path: str | None = None) -> list[dict]:
+    """Scheduled-cadence rows from BENCH_opt.json's sched records
+    (largest K, B=1): the locked period's tokens/cycle vs the 0.5
+    handshake bound vs the dynamic engine's measured output cadence
+    (tokens/cycle of the matching opt="full" record)."""
+    path = path or OPT_JSON
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        payload = json.load(f)
+    recs = payload["records"] if isinstance(payload, dict) else payload
+    if not recs:
+        return []
+    K = max(r["K"] for r in recs)
+    rows = []
+    for r in recs:
+        if (r.get("opt") != "sched" or not r.get("scheduled")
+                or r["B"] != 1 or r["K"] != K
+                or "steady_tokens_per_cycle" not in r):
+            continue
+        dyn = next((d for d in recs
+                    if d["name"] == r["name"]
+                    and d["backend"] == r["backend"]
+                    and d["B"] == 1 and d["K"] == K
+                    and d["opt"] == "full"), None)
+        steady = r["steady_tokens_per_cycle"]
+        row = dict(name=r["name"], backend=r["backend"], K=K,
+                   period_cycles=r["period_cycles"],
+                   period_tokens=r["period_tokens"],
+                   steady_tokens_per_cycle=steady,
+                   bound_frac=round(steady / CADENCE_BOUND, 4))
+        if dyn is not None:
+            row["dynamic_tokens_per_cycle"] = round(
+                dyn["tokens_per_s"] / max(dyn["cycles_per_s"], 1), 4)
+            row["speedup_vs_dynamic"] = round(
+                r["cycles_per_s"] / max(dyn["cycles_per_s"], 1), 2)
+        rows.append(row)
+    return rows
+
+
+def sched_main(path: str | None = None) -> None:
+    rows = sched_rows(path)
+    if not rows:
+        print("roofline_sched_no_records,0,run run.py --opt first")
+        return
+    for r in rows:
+        dyn = r.get("dynamic_tokens_per_cycle", "-")
+        spd = r.get("speedup_vs_dynamic", "-")
+        print(f"roofline_sched_{r['name']}_{r['backend']},0,"
+              f"steady={r['steady_tokens_per_cycle']}tok/cyc"
+              f"(period={r['period_tokens']}tok/"
+              f"{r['period_cycles']}cyc);"
+              f"bound_frac={r['bound_frac']}"
+              f"(handshake={CADENCE_BOUND}tok/cyc);"
+              f"dynamic={dyn}tok/cyc;"
+              f"speedup_vs_dynamic={spd}x")
+
+
 def load(tag: str | None = None, mesh: str | None = None):
     recs = []
     for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
@@ -101,6 +169,7 @@ def table(recs):
 
 def main():
     fabric_main()
+    sched_main()
     recs = load(tag="baseline", mesh="pod")
     if not recs:
         print("roofline_no_records,0,run launch/dryrun.py first")

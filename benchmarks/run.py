@@ -4,9 +4,10 @@
              engine cycles + compiled throughput)
   engine_*   block-fused/batched engine executor sweep (also serialized
              to BENCH_dataflow.json for cross-PR perf tracking)
-  opt_*      graph-compiler optimization sweep: off vs spec vs full
-             across backends x K x B (BENCH_opt.json; --opt runs it
-             alone, --quick --opt is the CI smoke)
+  opt_*      graph-compiler optimization sweep: off vs spec vs full vs
+             sched across backends x K x B (BENCH_opt.json; --opt runs
+             it alone, --quick --opt is the CI smoke and
+             --quick --sched the scheduled-vs-dynamic one)
   profile_*  §12 fabric-counter sweep (profiled engines; BENCH_profile
              .json feeds roofline.py's fabric section; --trace runs it
              alone, --quick --trace is the CI smoke)
@@ -150,6 +151,40 @@ def quick_opt() -> None:
     table1_dataflow.print_opt_csv(recs)
 
 
+def quick_sched() -> None:
+    """CI smoke for static firing schedules (DESIGN.md §13): scheduled
+    vs dynamic rows on a control-free bench (fir: schedules engage,
+    steady-state cadence reported) and a control-bearing one (gcd:
+    scheduled compile falls back dynamically) across both device
+    backends, plus a bit-identity cross-check against the dynamic
+    engine.  No JSON — the committed BENCH_opt.json is a full-run
+    artifact."""
+    from benchmarks import table1_dataflow
+    from repro.core import library
+    from repro.core.compile import compile as _compile
+
+    recs = table1_dataflow.opt_rows(
+        Bs=(1, 2), Ks=(4,), reps=1, k_tokens=4, fib_iters=8,
+        benches=("fir", "gcd"), levels=("full", "sched"))
+    table1_dataflow.print_opt_csv(recs)
+    sched = {r["name"]: r for r in recs if r["opt"] == "sched"
+             and r["B"] == 1}
+    assert sched["fir"]["scheduled"], "fir must compile a schedule"
+    assert not sched["gcd"]["scheduled"], "gcd must fall back dynamic"
+    for name in ("fir", "gcd"):
+        bench = library.BENCHES[name]()
+        k = 8 if name in library.SINGLE_SHOT else 4
+        feeds = library.random_feeds(name, bench, k,
+                                     np.random.default_rng(7))
+        dyn = _compile(bench.graph, backend="xla", optimize="full",
+                       block_cycles=4)(feeds)
+        sch = _compile(bench.graph, backend="xla", optimize="sched",
+                       block_cycles=4)(feeds)
+        assert dyn.outputs == sch.outputs and dyn.cycles == sch.cycles \
+            and dyn.fired == sch.fired, f"sched diverged on {name}"
+        print(f"sched_check_{name},0,bit_identical=1")
+
+
 def main() -> None:
     from benchmarks import table1_dataflow, kernels_bench, roofline
     table1_dataflow.main()
@@ -185,7 +220,12 @@ if __name__ == "__main__":
     if "--trace" in sys.argv:
         profile_json(quick="--quick" in sys.argv)  # the §12 sweep alone
     elif "--quick" in sys.argv:
-        quick_opt() if "--opt" in sys.argv else quick()
+        if "--sched" in sys.argv:
+            quick_sched()
+        elif "--opt" in sys.argv:
+            quick_opt()
+        else:
+            quick()
     elif "--opt" in sys.argv:
         opt_json()                     # the opt sweep alone
     else:

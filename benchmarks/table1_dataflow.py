@@ -149,21 +149,47 @@ def backend_rows(Bs=(1, 8, 64), block=16, reps=3, k_tokens=8,
     return out
 
 
+def _steady_info(eng, feeds):
+    """Scheduled-engine extras: the locked steady-state period and its
+    token cadence (None when the engine is dynamic or the plan quiesced
+    before a period formed)."""
+    if not getattr(eng, "_sched_on", False):
+        return None
+    from repro.core.engine import pack_feeds
+    ctx = eng._sched_ctx()
+    _, fl = pack_feeds(eng.p["input_arcs"], feeds, eng.token_shape,
+                       ctx.np_dtype)
+    plan = ctx.plan_for(tuple(int(x) for x in fl))
+    plan.ensure(eng.max_cycles)
+    s = plan.steady()
+    if s is None:
+        return None
+    pc, pt = s
+    return dict(period_cycles=pc, period_tokens=pt,
+                steady_tokens_per_cycle=round(pt / pc, 4))
+
+
 def opt_rows(Bs=(1, 8), Ks=(4, 16), reps=7, k_tokens=64, fib_iters=300,
              benches=None, backends=("xla", "pallas"),
-             levels=(False, "spec", "full")):
-    """--opt/--no-opt sweep (ISSUE 3): every optimization level across
-    backends x K x B, one JSON-able record per configuration.
+             levels=(False, "spec", "full", "sched")):
+    """--opt/--no-opt sweep (ISSUE 3 + 8): every optimization level
+    across backends x K x B, one JSON-able record per configuration.
 
     Levels:
-      off  — the graph exactly as authored, dense ~20-way ALU
-             where-chain per cycle (the PR 1/2 engine).
-      spec — opcode-class-specialized plan only (DESIGN.md §8):
-             bucketed fire bodies over only the opcodes present;
-             bit-identical in every EngineResult field.
-      full — graph rewrite passes (constant folding, identity
-             elimination, DCE) + the specialized plan; fabrics shrink,
-             so simulated cycles may drop too.
+      off   — the graph exactly as authored, dense ~20-way ALU
+              where-chain per cycle (the PR 1/2 engine).
+      spec  — opcode-class-specialized plan only (DESIGN.md §8):
+              bucketed fire bodies over only the opcodes present;
+              bit-identical in every EngineResult field.
+      full  — graph rewrite passes (constant folding, identity
+              elimination, DCE) + the specialized plan; fabrics shrink,
+              so simulated cycles may drop too.
+      sched — "full" + static firing schedules (DESIGN.md §13): on
+              control-free fabrics the per-cycle fire sets compile out
+              of the run loop entirely (no ready-mask reduction) and
+              the record gains period_cycles / period_tokens /
+              steady_tokens_per_cycle; cyclic / control-bearing benches
+              fall back to the dynamic engine (rows mirror "full").
 
     Streams are long (k_tokens tokens / fib_iters loop iterations) so
     per-cycle compute, not dispatch overhead, dominates; timings take
@@ -205,7 +231,7 @@ def opt_rows(Bs=(1, 8), Ks=(4, 16), reps=7, k_tokens=64, fib_iters=300,
                             ts.append(time.perf_counter() - t0)
                         us = float(min(ts)) * 1e6
                         cyc = sum(r.cycles for r in rs)
-                        out.append(dict(
+                        rec = dict(
                             name=name, backend=be, B=B, K=K,
                             opt="off" if opt is False else opt,
                             nodes=len(run.graph.nodes),
@@ -213,7 +239,14 @@ def opt_rows(Bs=(1, 8), Ks=(4, 16), reps=7, k_tokens=64, fib_iters=300,
                             cycles_per_s=round(cyc / us * 1e6),
                             tokens_per_s=round(B * tok1 / us * 1e6),
                             dispatches=rs[0].dispatches,
-                            cycles=rs[0].cycles))
+                            cycles=rs[0].cycles)
+                        if opt == "sched":
+                            rec["scheduled"] = bool(
+                                getattr(eng, "_sched_on", False))
+                            steady = _steady_info(eng, feeds)
+                            if steady is not None:
+                                rec.update(steady)
+                        out.append(rec)
     return out
 
 

@@ -304,7 +304,7 @@ def compile_cyclic(graph: Graph, token_shape=(), dtype=jnp.int32,
     return run
 
 
-OPTIMIZE_LEVELS = (False, "spec", "full", True)
+OPTIMIZE_LEVELS = (False, "spec", "full", True, "sched")
 BACKENDS_NOTE = "xla | pallas | reference"
 EXECUTORS = ("auto", "dag", "unrolled", *BACKENDS)
 
@@ -344,7 +344,14 @@ def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
         their timing are left untouched) *then* the specialized plan
         where a plan exists.  For fabrics that quiesce the surviving
         output arcs drain bit-identical values and token counts while
-        ``cycles``/``fired`` may shrink.
+        ``cycles``/``fired`` may shrink;
+      * ``"sched"`` — everything ``"full"`` does, plus static firing
+        schedules (DESIGN.md §13): when the rewritten graph is
+        statically schedulable (``GraphTraits.tokens_out_static``) the
+        engine compiles the per-cycle fire sets out of the run loop —
+        no ready-mask reduction — and falls back to the dynamic engine
+        otherwise (cyclic / control-bearing fabrics, §10).  Engine
+        backends only, bit-identical results either way.
 
     profile=True turns on the DESIGN.md §12 fabric counters: every
     EngineResult carries ``node_fires`` and a
@@ -363,11 +370,13 @@ def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
         raise ValueError(f"optimize {optimize!r} not in {OPTIMIZE_LEVELS}")
     if backend not in EXECUTORS:
         raise ValueError(f"backend {backend!r} not in {EXECUTORS}")
-    if optimize == "spec" and backend in ("auto", "dag", "unrolled"):
-        # specialization is plan-level; the SSA executors have no plan,
-        # so "spec" would silently measure an unoptimized runner
+    if optimize in ("spec", "sched") and backend in ("auto", "dag",
+                                                     "unrolled"):
+        # specialization/scheduling is plan-level; the SSA executors
+        # have no plan, so either would silently measure an
+        # unoptimized runner
         raise ValueError(
-            'optimize="spec" needs an engine backend '
+            f'optimize={optimize!r} needs an engine backend '
             f'({BACKENDS_NOTE}); backend={backend!r} only supports the '
             'rewrite pipeline (optimize="full"/True)')
     if profile and backend not in BACKENDS:
@@ -376,7 +385,7 @@ def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
             f"backend={backend!r} runs SSA semantics with no fabric "
             "cycles to count")
     report = None
-    if optimize in (True, "full"):
+    if optimize in (True, "full", "sched"):
         from repro.core import passes
         graph, report = passes.optimize_graph(graph, dtype=np.dtype(
             str(jnp.dtype(dtype))))
@@ -395,7 +404,9 @@ def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
         eng = DataflowEngine(graph, token_shape, dtype, max_cycles,
                              backend=backend, block_cycles=block_cycles,
                              optimize=optimize is not False,
-                             profile=profile)
+                             profile=profile,
+                             schedule="auto" if optimize == "sched"
+                             else False)
         run = lambda feeds, max_cycles=None: eng.run(feeds, max_cycles)
         run.engine = eng
     elif backend == "unrolled":

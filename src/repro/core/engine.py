@@ -330,6 +330,10 @@ class SlotState:
                                 # admission/harvest, not per block)
     prof: tuple | None = None
     prof_cycles: np.ndarray = None
+    sched: object = None        # scheduled engines: repro.core.schedule
+                                # .SlotSched (per-slot plan refs +
+                                # schedule positions + host-side §12
+                                # counters); None on dynamic engines
 
     @property
     def slots(self) -> int:
@@ -424,7 +428,8 @@ class DataflowEngine:
     def __init__(self, graph: Graph, token_shape: tuple[int, ...] = (),
                  dtype=jnp.int32, max_cycles: int = 100_000,
                  backend: str = "xla", block_cycles: int = 1,
-                 optimize: bool = False, profile: bool = False):
+                 optimize: bool = False, profile: bool = False,
+                 schedule: bool | str = False):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
         if block_cycles < 1:
@@ -447,6 +452,29 @@ class DataflowEngine:
         # byte-for-byte the pre-observability ones (zero overhead, zero
         # extra dispatches).
         self.profile = bool(profile)
+        # schedule: False/None = dynamic interpreter; "auto" = compile
+        # the static firing schedule when the fabric is control-free
+        # (DESIGN.md §13), dynamic otherwise; True = require the
+        # schedule (raise naming the blockers if the fabric can't be
+        # scheduled).  Scheduled execution stays bit-identical to the
+        # dynamic engine in every reported field; a plan that fails to
+        # lock onto a period in budget silently falls back to the
+        # dynamic run path (a perf decision, never a semantic one).
+        if schedule not in (False, None, True, "auto"):
+            raise ValueError("schedule must be False, True, or 'auto', "
+                             f"got {schedule!r}")
+        self.schedule = schedule
+        self._sched = None
+        self._sched_on = False
+        if schedule:
+            from repro.core.schedule import schedule_blockers
+            blockers = schedule_blockers(graph)
+            if blockers and schedule is True:
+                raise ValueError(
+                    "schedule=True needs a statically schedulable "
+                    f"fabric, but this one has: {', '.join(blockers)} "
+                    "(use schedule='auto' to fall back dynamically)")
+            self._sched_on = not blockers
         self.p = _plan(graph, optimize=self.optimize)
         self._slot_steps: dict[int, object] = {}
         self._tables = None
@@ -470,11 +498,25 @@ class DataflowEngine:
                                              optimize=self.optimize)
         return self._tables
 
+    def _sched_ctx(self):
+        """Lazy per-engine schedule state (DESIGN.md §13)."""
+        if self._sched is None:
+            from repro.core.schedule import ScheduleContext
+            self._sched = ScheduleContext(self.p, self.graph,
+                                          self.token_shape, self.dtype)
+        return self._sched
+
     # -- public ---------------------------------------------------------
     def run(self, feeds: Mapping[str, object] | None = None,
             max_cycles: int | None = None) -> EngineResult:
         """feeds: arc -> [k, *token_shape] stream of tokens (k may vary)."""
         max_cycles = max_cycles or self.max_cycles
+        if self._sched_on:
+            from repro.core import schedule as _sched
+            try:
+                return _sched.run_scheduled(self, feeds, max_cycles)
+            except _sched.ScheduleBail:
+                pass        # pathological period: dynamic path below
         if self.backend == "reference":
             return run_reference(self.graph, feeds, self.token_shape,
                                  np.dtype(str(self.dtype)), max_cycles,
@@ -508,6 +550,16 @@ class DataflowEngine:
             raise ValueError(
                 "run_batch: feeds_batch is empty — pass at least one "
                 "feed dict (use run() for a single stream)")
+        if self._sched_on:
+            from repro.core import schedule as _sched
+            try:
+                res = _sched.run_batch_scheduled(self, feeds_batch,
+                                                 max_cycles)
+            except _sched.ScheduleBail:
+                res = None
+            if res is not None:     # None: mixed feed lengths — the
+                return res          # schedule is per-length; dynamic
+                                    # path handles the ragged batch
         if self.backend == "reference":
             return [run_reference(self.graph, f, self.token_shape,
                                   np.dtype(str(self.dtype)), max_cycles,
@@ -619,10 +671,18 @@ class DataflowEngine:
             cap=np.full((B,), self.max_cycles, np.int64), stalled=z64(),
             active_dev=jnp.zeros((B,), jnp.int32),
             # profiled engines ride the counters in device state; the
-            # slot steppers run on the kernel tables (N+1 node rows)
+            # slot steppers run on the kernel tables (N+1 node rows).
+            # Scheduled engines reconstruct profiles on the host from
+            # the plan instead (closed form — no device counters).
             prof=_prof_zeros(len(self.graph.nodes) + 1, p["A"] + 2,
-                             batch=B) if self.profile else None,
-            prof_cycles=z64() if self.profile else None)
+                             batch=B)
+            if self.profile and not self._sched_on else None,
+            prof_cycles=z64() if self.profile else None,
+            sched=self._make_slot_sched(B) if self._sched_on else None)
+
+    def _make_slot_sched(self, slots: int):
+        from repro.core.schedule import SlotSched
+        return SlotSched(self._sched_ctx(), slots, self.profile)
 
     def _slot_step(self, n_cycles: int):
         """Jitted masked batched block step (backend-appropriate)."""
@@ -715,13 +775,24 @@ class DataflowEngine:
         prof, prof_cycles = state.prof, state.prof_cycles
         if self.profile and prof is not None:
             prof = _prof_reset(prof, jnp.asarray(mask))
+        if self.profile:
             prof_cycles = prof_cycles.copy()
             prof_cycles[slot_ids] = 0
+        sched = state.sched
+        if self._sched_on:
+            if sched is None:
+                sched = self._make_slot_sched(B)
+            ctx = self._sched_ctx()
+            n_real = len(p["input_arcs"])
+            for b, (_, fl) in zip(slot_ids, packed):
+                flen = tuple(int(x) for x in fl[:n_real])
+                sched.reset(b, ctx.plan_for(flen))
         return SlotState(fv_, fl_, full, val, ptr, out_last, out_count,
                          active, base, last, fired, quiesced, disp,
                          cap=cap, stalled=stalled,
                          active_dev=jnp.asarray(active),
-                         prof=prof, prof_cycles=prof_cycles)
+                         prof=prof, prof_cycles=prof_cycles,
+                         sched=sched)
 
     def step_block(self, state: SlotState,
                    n_cycles: int | None = None) -> SlotState:
@@ -736,6 +807,9 @@ class DataflowEngine:
             raise ValueError("n_cycles must be >= 1")
         if not state.active.any():
             return state
+        if self._sched_on:
+            from repro.core import schedule as _sched
+            return _sched.step_block_sched(self, state, nb)
         step = self._slot_step(nb)
         active_dev = state.active_dev if state.active_dev is not None \
             else jnp.asarray(state.active)
@@ -772,7 +846,8 @@ class DataflowEngine:
                          base, last, fired, quiesced, disp,
                          cap=state.cap, stalled=stalled,
                          active_dev=active_dev,
-                         prof=prof, prof_cycles=prof_cycles)
+                         prof=prof, prof_cycles=prof_cycles,
+                         sched=state.sched)
 
     def harvest(self, state: SlotState, slot_ids
                 ) -> tuple[SlotState, list[EngineResult]]:
@@ -790,13 +865,23 @@ class DataflowEngine:
                                               state.out_count))
         prof = jax.device_get(state.prof) if self.profile \
             and state.prof is not None else None
+
+        def _prof_row(b):
+            # scheduled engines accrue §12 counters on the host from the
+            # plan (closed form); dynamic engines read the device rows
+            if self.profile and self._sched_on and state.sched is not None:
+                return (*state.sched.prof_row(b),
+                        int(state.prof_cycles[b]),
+                        int(state.dispatches[b]))
+            if prof is None:
+                return None
+            return (*(x[b] for x in prof), int(state.prof_cycles[b]),
+                    int(state.dispatches[b]))
         results = [self._result_from_state(
             out_last[b], out_count[b],
             int(min(state.last[b] + 1, state.cap[b])),
             int(state.fired[b]), int(state.dispatches[b]),
-            prof=None if prof is None else
-            (*(x[b] for x in prof), int(state.prof_cycles[b]),
-             int(state.dispatches[b])))
+            prof=_prof_row(b))
             for b in slot_ids]
         active = state.active.copy()
         quiesced = state.quiesced.copy()

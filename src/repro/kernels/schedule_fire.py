@@ -1,0 +1,193 @@
+"""Pallas lowering of static firing schedules (DESIGN.md §13).
+
+Two entry points, mirroring the dynamic kernels in dataflow_fire.py:
+
+* :func:`make_sched_run` wraps the schedule context's straight-line
+  scheduled program (prologue unrolled, each steady-state period fused
+  into one ``fori_loop`` body) in a single ``pallas_call`` — the whole
+  run is one kernel, arc registers live as kernel-local SSA values,
+  and there is no ready-mask reduction anywhere.  The batched variant
+  uses the same ``grid=(B,)`` row-block layout as
+  ``fire_block_batched_pallas``.
+* :func:`make_sched_slot_step` is the scheduled block step for the
+  resumable slot API: per-pattern gather tables broadcast across the
+  grid, a host-computed pid sequence per slot row, K table-driven
+  cycles per dispatch.  Inactive slots ride pid 0 (a no-op pattern)
+  with ``fsel == -1`` gating the post-block register update, exactly
+  like the dynamic kernels' clock gate.
+
+The scheduled programs bake per-pattern index vectors as trace-time
+constants; ``pallas_call`` forbids captured array constants, so both
+wrappers trace the program to a jaxpr once, hoist its constvars, and
+feed them back in as ordinary kernel operands (``jax.closure_convert``
+is not enough — it only hoists tracer-derived consts, not baked numpy
+arrays).
+
+Scalar int32 tokens only — the pallas backend's standing contract.
+Kernels run in interpret mode on CPU (no TPU in CI), compiled on
+accelerator backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hoist(fn, *example_args):
+    """Trace ``fn`` to a jaxpr and hoist its constvars: returns
+    ``(fn_c, consts)`` with ``fn_c(*args, *consts)`` equivalent to
+    ``fn(*args)`` but capture-free (every baked array becomes an
+    explicit operand, as pallas_call requires).  All example args and
+    outputs must be flat arrays (they are — scheduled state is a flat
+    tuple of int32 rows)."""
+    closed = jax.make_jaxpr(fn)(*example_args)
+    jaxpr, consts = closed.jaxpr, list(closed.consts)
+    n_args = len(example_args)
+    n_out = len(jaxpr.outvars)
+
+    def fn_c(*args_and_consts):
+        args = args_and_consts[:n_args]
+        cs = args_and_consts[n_args:]
+        out = jax.core.eval_jaxpr(jaxpr, cs, *args)
+        return out[0] if n_out == 1 else tuple(out)
+    return fn_c, consts
+
+
+def _whole_s(shape):
+    """Whole-operand block (broadcast across the grid)."""
+    n = len(shape)
+    return pl.BlockSpec(tuple(shape), lambda *_, n=n: (0,) * n)
+
+
+def _row_s(shape):
+    """Per-grid-step row block (leading batch axis)."""
+    n = len(shape)
+    return pl.BlockSpec((1, *shape[1:]), lambda b, n=n: (b,) + (0,) * (n - 1))
+
+
+def make_sched_run(fn, n_out: int, batched: bool):
+    """Pallas wrapper around the scheduled straight-line program
+    ``fn(fv, reps) -> (out_last, out_count)``.
+
+    fv[n_in, L] int32 (leading B axis when batched), reps int32[R]
+    carries the traced fori_loop trip counts, so one kernel serves
+    every feed-length tuple that shares the schedule structure.
+    Compiled callables cache per operand shape."""
+    cache = {}
+
+    def _build(fv_shape, reps_shape):
+        row_shape = fv_shape[1:] if batched else fv_shape
+        fn_c, consts = _hoist(
+            fn, jnp.zeros(row_shape, jnp.int32),
+            jnp.zeros(reps_shape, jnp.int32))
+        nc = len(consts)
+        interpret = jax.default_backend() == "cpu"
+        if not batched:
+            out_sd = [jax.ShapeDtypeStruct((n_out,), jnp.int32),
+                      jax.ShapeDtypeStruct((n_out,), jnp.int32)]
+
+            def kern(*refs):
+                fv_r, reps_r = refs[0], refs[1]
+                cs = [r[...] for r in refs[2:2 + nc]]
+                ol_r, oc_r = refs[2 + nc], refs[3 + nc]
+                ol, oc = fn_c(fv_r[...], reps_r[...], *cs)
+                ol_r[...] = ol
+                oc_r[...] = oc
+            pc = pl.pallas_call(
+                kern,
+                in_specs=[_whole_s(fv_shape), _whole_s(reps_shape)]
+                + [_whole_s(c.shape) for c in consts],
+                out_specs=[_whole_s(s.shape) for s in out_sd],
+                out_shape=out_sd,
+                interpret=interpret)
+        else:
+            B = fv_shape[0]
+            out_sd = [jax.ShapeDtypeStruct((B, n_out), jnp.int32),
+                      jax.ShapeDtypeStruct((B, n_out), jnp.int32)]
+
+            def kern(*refs):
+                fv_r, reps_r = refs[0], refs[1]
+                cs = [r[...] for r in refs[2:2 + nc]]
+                ol_r, oc_r = refs[2 + nc], refs[3 + nc]
+                ol, oc = fn_c(fv_r[0], reps_r[...], *cs)
+                ol_r[0] = ol
+                oc_r[0] = oc
+            pc = pl.pallas_call(
+                kern, grid=(B,),
+                in_specs=[_row_s(fv_shape), _whole_s(reps_shape)]
+                + [_whole_s(c.shape) for c in consts],
+                out_specs=[_row_s(s.shape) for s in out_sd],
+                out_shape=out_sd,
+                interpret=interpret)
+        return jax.jit(lambda fv, reps: pc(fv, reps, *consts))
+
+    def runner(fv, reps):
+        key = (tuple(fv.shape), tuple(reps.shape))
+        call = cache.get(key)
+        if call is None:
+            call = cache[key] = _build(*key)
+        return call(fv, reps)
+    return runner
+
+
+def make_sched_slot_step(ctx, n_cycles: int):
+    """Scheduled slot block step, grid=(B,): each slot row executes
+    ``n_cycles`` table-driven scheduled cycles (its host-computed pid
+    sequence) and lands on the pattern-exact post-block registers.
+
+    Call signature (mirrors the xla vmapped stepper):
+    (fv[B,n_in,L], pids[B,K], fsel[B], full[B,A2], val[B,A2],
+    ptr[B,n_in], out_last[B,n_out], out_count[B,n_out], *tables)
+    -> (full', val', ptr', out_last', out_count')."""
+    cache = {}
+
+    def _build(shapes):
+        (fv_s, pids_s, fsel_s, *st_s), tab_s = shapes[:8], shapes[8:]
+        nt = len(tab_s)
+
+        def body(fv, pids, fsel, full, val, ptr, ol, oc, *tabs):
+            return ctx.slot_body(tabs, fv, pids, fsel, full, val,
+                                 ptr, ol, oc, n_cycles)
+        ex = [jnp.zeros(fv_s[1:], jnp.int32),
+              jnp.zeros(pids_s[1:], jnp.int32),
+              jnp.zeros((), jnp.int32)] \
+            + [jnp.zeros(s[1:], jnp.int32) for s in st_s] \
+            + [jnp.zeros(s, jnp.int32) for s in tab_s]
+        body_c, consts = _hoist(body, *ex)
+        nc = len(consts)
+        out_sd = [jax.ShapeDtypeStruct(s, jnp.int32) for s in st_s]
+        B = fv_s[0]
+
+        def kern(*refs):
+            fv_r, pids_r, fsel_r = refs[0], refs[1], refs[2]
+            st_r = refs[3:8]
+            tab_r = refs[8:8 + nt]
+            c_r = refs[8 + nt:8 + nt + nc]
+            out_r = refs[8 + nt + nc:]
+            res = body_c(fv_r[0], pids_r[0], fsel_r[0],
+                         *(s[0] for s in st_r),
+                         *(t[...] for t in tab_r),
+                         *(c[...] for c in c_r))
+            for r, v in zip(out_r, res):
+                r[0] = v
+        pc = pl.pallas_call(
+            kern, grid=(B,),
+            in_specs=[_row_s(fv_s), _row_s(pids_s),
+                      pl.BlockSpec((1,), lambda b: (b,))]
+            + [_row_s(s) for s in st_s]
+            + [_whole_s(s) for s in tab_s]
+            + [_whole_s(c.shape) for c in consts],
+            out_specs=[_row_s(s.shape) for s in out_sd],
+            out_shape=out_sd,
+            interpret=jax.default_backend() == "cpu")
+        return jax.jit(lambda *a: pc(*a, *consts))
+
+    def runner(fv, pids, fsel, full, val, ptr, ol, oc, *tabs):
+        args = (fv, pids, fsel, full, val, ptr, ol, oc, *tabs)
+        key = tuple(tuple(x.shape) for x in args)
+        call = cache.get(key)
+        if call is None:
+            call = cache[key] = _build(key)
+        return call(*args)
+    return runner

@@ -116,17 +116,21 @@ def cached_engine(graph: Graph, *, backend: str = "xla",
                   max_cycles: int = 100_000,
                   token_shape: tuple = (), dtype=np.int32,
                   optimize: bool = False,
-                  profile: bool = False) -> DataflowEngine:
+                  profile: bool = False,
+                  schedule: bool | str = False) -> DataflowEngine:
     """Engine for (graph signature, backend, K, token_shape, dtype,
-    optimize, profile) — compiled once, shared by every server/request
-    that presents the same fabric (the cache key hashes the signature,
-    not the graph object, so structurally equal graphs share).
+    optimize, profile, schedule) — compiled once, shared by every
+    server/request that presents the same fabric (the cache key hashes
+    the signature, not the graph object, so structurally equal graphs
+    share).
 
-    token_shape/dtype/optimize/profile are part of the key: two servers
-    over the same fabric signature with different token shapes or opt
-    flags compile to different plans and must not collide on one
-    engine (a profiled engine threads §12 counter state through every
-    step, so it cannot share dispatch plans with an unprofiled one)."""
+    token_shape/dtype/optimize/profile/schedule are part of the key:
+    two servers over the same fabric signature with different token
+    shapes or opt flags compile to different plans and must not collide
+    on one engine (a profiled engine threads §12 counter state through
+    every step, so it cannot share dispatch plans with an unprofiled
+    one; a scheduled engine replaces the block stepper entirely, so it
+    cannot alias the dynamic engine for the same signature)."""
     if backend not in BACKENDS:
         raise ValueError(f"backend {backend!r} not in {BACKENDS}")
     token_shape = tuple(int(d) for d in token_shape)
@@ -134,7 +138,8 @@ def cached_engine(graph: Graph, *, backend: str = "xla",
         else np.dtype(dtype)
     key = (hashlib.sha256(graph_signature(graph).encode()).hexdigest(),
            backend, int(block_cycles), int(max_cycles),
-           token_shape, dtype.str, bool(optimize), bool(profile))
+           token_shape, dtype.str, bool(optimize), bool(profile),
+           str(schedule))
     eng = _ENGINE_CACHE.get(key)
     if eng is None:
         CACHE_STATS["misses"] += 1
@@ -143,7 +148,8 @@ def cached_engine(graph: Graph, *, backend: str = "xla",
                              block_cycles=block_cycles,
                              max_cycles=max_cycles,
                              optimize=optimize,
-                             profile=profile)
+                             profile=profile,
+                             schedule=schedule)
         _ENGINE_CACHE[key] = eng
         while len(_ENGINE_CACHE) > _ENGINE_CACHE_MAX:
             _ENGINE_CACHE.popitem(last=False)
@@ -203,7 +209,8 @@ class DataflowServer:
                  wedge_timeout_blocks: int = 32,
                  max_retries: int = 3, retry_backoff_s: float = 0.0,
                  faults=None, profile: bool = False,
-                 trace=None, metrics=None):
+                 trace=None, metrics=None,
+                 schedule: bool | str = False):
         if slots < 1:
             raise ValueError("slots must be >= 1")
         if policy not in POLICIES:
@@ -238,6 +245,11 @@ class DataflowServer:
                 "fault", injected=kind, key=list(map(str, key)))
         self._block_cycles = int(block_cycles)
         self._optimize = bool(optimize)
+        # schedule="auto" serves static firing schedules (DESIGN.md
+        # §13) when the fabric is schedulable, dynamic otherwise; it
+        # rides the cache key so scheduled and dynamic engines for the
+        # same fabric signature never alias
+        self._schedule = schedule
         self._input_arcs = tuple(graph.input_arcs())
         self.queue = FairQueue()
         self.block = 0            # server block clock (dispatches issued)
@@ -289,7 +301,7 @@ class DataflowServer:
                     self.engine = cached_engine(
                         graph, backend=be, block_cycles=block_cycles,
                         max_cycles=max_cycles, optimize=optimize,
-                        profile=self.profile)
+                        profile=self.profile, schedule=schedule)
                     break
                 except Exception as e:
                     self._log_event("compile-degrade", backend=be,
@@ -692,7 +704,7 @@ class DataflowServer:
                     self.graph, backend=be,
                     block_cycles=self._block_cycles,
                     max_cycles=self.max_cycles, optimize=self._optimize,
-                    profile=self.profile)
+                    profile=self.profile, schedule=self._schedule)
                 self.state = self.engine.init_state(self.slots)
                 self._log_event("degrade-to", backend=be)
                 return

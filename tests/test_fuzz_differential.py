@@ -187,11 +187,19 @@ def differential_case(g: Graph, feeds_list, Ks, tag, dtype=np.int32):
             e_full = DataflowEngine(g_full, dtype=dtype, backend=backend,
                                     block_cycles=K, max_cycles=CAP,
                                     optimize=True)
+            # "sched" joins the optimize matrix (ISSUE 8): static
+            # firing schedules on schedulable fabrics, silent dynamic
+            # fallback on the rest — bit-identical either way
+            e_sched = DataflowEngine(g_full, dtype=dtype, backend=backend,
+                                     block_cycles=K, max_cycles=CAP,
+                                     optimize=True, schedule="auto")
             for i, f in enumerate(feeds_list):
                 t = (tag, backend, K, i)
                 _check_full(e_off.run(f), oracles[i], (*t, "off"))
                 _check_full(e_spec.run(f), oracles[i], (*t, "spec"))
                 _check_full(e_full.run(f), oracles_full[i], (*t, "full"))
+                _check_full(e_sched.run(f), oracles_full[i],
+                            (*t, "sched"))
 
 
 @pytest.mark.parametrize("seed", range(N_GRAPHS))
