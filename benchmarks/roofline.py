@@ -17,6 +17,16 @@ output cadence — tokens per cycle of the locked period (DESIGN.md
 dynamic engine's measured output cadence, showing where software-
 pipelined arc registers push throughput past the handshake cadence.
 
+The sharding section (``shard_rows``, from BENCH_shard.json, written
+by ``run.py --shard``) inspects the §14 multi-fabric speedup story the
+same way: *per-region cadence* — the ideal speedup is bounded by the
+hottest region's weight fraction (1/max_region_frac, the spatial
+Amdahl term) — vs *channel-bound cadence* — each cut arc is a
+register-pair channel moving at most one token every 2 cycles, so a
+K-cycle block carries at most 0.5*K tokens per channel; measured
+cut-arc traffic per block over that capacity says whether the fabric
+is compute- or channel-limited at this partition.
+
 CSV: name,us_per_call,derived  (us_per_call = dominant term in us)
 """
 from __future__ import annotations
@@ -33,6 +43,9 @@ PROFILE_JSON = os.path.join(os.path.dirname(__file__), "..",
 
 OPT_JSON = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_opt.json")
+
+SHARD_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_shard.json")
 
 # handshake cadence bound: 1 token per 2 cycles per arc (DESIGN.md §2)
 CADENCE_BOUND = 0.5
@@ -142,6 +155,55 @@ def sched_main(path: str | None = None) -> None:
               f"speedup_vs_dynamic={spd}x")
 
 
+def shard_rows(path: str | None = None) -> list[dict]:
+    """Sharding roofline rows from BENCH_shard.json (P>1 records):
+    measured speedup vs the per-region cadence bound (1/max_region_frac
+    — the hottest region paces the lockstep global cycle) and cut-arc
+    traffic per block vs the channel capacity (0.5*K tokens per channel
+    per block, the handshake cadence over a K-cycle block)."""
+    path = path or SHARD_JSON
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        payload = json.load(f)
+    recs = payload["records"] if isinstance(payload, dict) else payload
+    rows = []
+    for r in recs:
+        if r["P"] <= 1:
+            continue
+        ideal = 1.0 / max(r["max_region_frac"], 1e-9)
+        cap = CADENCE_BOUND * r["K"] * r["cut_arcs"]
+        traffic = r.get("cut_tokens_per_block") or 0.0
+        rows.append(dict(
+            name=r["name"], P=r["P"], K=r["K"],
+            speedup_vs_p1=r["speedup_vs_p1"],
+            region_bound_speedup=round(ideal, 3),
+            region_cadence_frac=round(r["speedup_vs_p1"] / ideal, 4),
+            cut_arcs=r["cut_arcs"],
+            cut_tokens_per_block=traffic,
+            channel_capacity_per_block=round(cap, 1),
+            channel_bound_frac=round(traffic / cap, 4) if cap else 0.0,
+            shard_map=r.get("shard_map", False),
+            devices=r.get("devices"), host_cpus=r.get("host_cpus")))
+    return rows
+
+
+def shard_main(path: str | None = None) -> None:
+    rows = shard_rows(path)
+    if not rows:
+        print("roofline_shard_no_records,0,run run.py --shard first")
+        return
+    for r in rows:
+        print(f"roofline_shard_{r['name']}_P{r['P']},0,"
+              f"speedup={r['speedup_vs_p1']}x"
+              f"(region_bound={r['region_bound_speedup']}x);"
+              f"region_cadence_frac={r['region_cadence_frac']};"
+              f"cut_traffic={r['cut_tokens_per_block']}tok/blk"
+              f"(cap={r['channel_capacity_per_block']});"
+              f"channel_bound_frac={r['channel_bound_frac']};"
+              f"devices={r['devices']};host_cpus={r['host_cpus']}")
+
+
 def load(tag: str | None = None, mesh: str | None = None):
     recs = []
     for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
@@ -170,6 +232,7 @@ def table(recs):
 def main():
     fabric_main()
     sched_main()
+    shard_main()
     recs = load(tag="baseline", mesh="pod")
     if not recs:
         print("roofline_no_records,0,run launch/dryrun.py first")

@@ -11,6 +11,11 @@
   profile_*  §12 fabric-counter sweep (profiled engines; BENCH_profile
              .json feeds roofline.py's fabric section; --trace runs it
              alone, --quick --trace is the CI smoke)
+  shard_*    §14 multi-fabric sharding sweep over P regions
+             (BENCH_shard.json feeds roofline.py's shard section;
+             --shard runs it alone, --quick --shard is the CI
+             sharded-vs-solo bit-identity smoke over forced host
+             devices)
   kernel_*   Pallas kernel micro-benchmarks vs jnp references
   train_*    end-to-end reduced-config train-step timings (per family)
   roofline_* aggregated dry-run roofline terms (if records exist)
@@ -21,7 +26,14 @@ from __future__ import annotations
 
 import json
 import os
+import sys
 import time
+
+if __name__ == "__main__" and "--shard" in sys.argv:
+    # multi-fabric sharding (DESIGN.md §14) wants real host devices;
+    # XLA only honors this flag if it is set before jax is imported
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
 
 import jax
 import numpy as np
@@ -185,6 +197,149 @@ def quick_sched() -> None:
         print(f"sched_check_{name},0,bit_identical=1")
 
 
+def _lanes_graph(lanes: int = 4, depth: int = 24):
+    """Embarrassingly-spatial fabric: `lanes` independent ADD/MUL
+    chains sharing one const bus — the partitioner finds a zero-cut
+    split, so sharding it measures pure per-region compute scaling
+    (channel exchange cost ~0)."""
+    from repro.core.graph import Graph, Op
+    g = Graph(name=f"lanes_{lanes}x{depth}")
+    g.const("c", 3)
+    for ln in range(lanes):
+        cur = f"in{ln}"
+        for d in range(depth):
+            nxt = f"l{ln}_{d}"
+            g.add(Op.ADD if d % 2 == 0 else Op.MUL, [cur, "c"], [nxt])
+            cur = nxt
+    g.validate()
+    return g
+
+
+def _shard_benches():
+    from repro.core import library
+    vs = library.vector_sum_graph(64)
+    pc = library.popcount_graph(16)
+    rng = np.random.default_rng(11)
+    lanes = _lanes_graph(4, 24)
+    return [
+        ("vector_sum_64", vs.graph,
+         library.random_feeds("vector_sum", vs, 8, rng)),
+        ("pop_count_16", pc.graph,
+         library.random_feeds("pop_count", pc, 8, rng)),
+        ("lanes_4x24", lanes,
+         {f"in{ln}": rng.integers(0, 9, (8,)) for ln in range(4)}),
+    ]
+
+
+def shard_json(path: str | None = None, Ps=(1, 2, 4), block: int = 8,
+               reps: int = 3) -> list[dict]:
+    """``--shard``: the multi-fabric sharding sweep (DESIGN.md §14) over
+    P regions on the large control-free benches, written to
+    BENCH_shard.json.  Every sharded run is bit-identity-checked against
+    the P=1 engine before its timing is recorded.
+
+    Records carry the honest context a reader needs to interpret the
+    wall clock: host core count and device count (forced host devices on
+    one core time-slice a single CPU, so cycles/s cannot exceed P=1
+    there — the *capacity* metrics, region balance and cut traffic, are
+    the device-independent scaling story)."""
+    from repro.core.engine import DataflowEngine
+    from repro.core.partition import partition_graph
+
+    recs = []
+    ncpu = os.cpu_count() or 1
+    ndev = len(jax.devices())
+    for name, graph, feeds in _shard_benches():
+        base = None
+        for P in Ps:
+            part = partition_graph(graph, P)
+            eng = DataflowEngine(graph, block_cycles=block,
+                                 partition=part)
+            r = eng.run(feeds)
+            if base is None:
+                base = r
+                base_us = None
+            assert r.outputs == base.outputs and r.cycles == base.cycles \
+                and r.fired == base.fired, f"shard diverged on {name} P={P}"
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                eng.run(feeds)
+                ts.append(time.perf_counter() - t0)
+            us = float(np.median(ts)) * 1e6
+            if base_us is None:
+                base_us = us
+            w = part.region_weights(graph)
+            cut = part.cut_arcs(graph)
+            mf = eng._mf_ctx() if eng._part_on else None
+            pushes_per_block = ch_hw = None
+            if mf is not None:
+                # measured cut-arc traffic: one profiled run (§12/§14
+                # counters), tokens crossing channels per K-cycle block
+                pr = DataflowEngine(graph, block_cycles=block,
+                                    partition=part,
+                                    profile=True).run(feeds)
+                prof = pr.profile
+                prof.check()
+                pushes_per_block = 0.0 if not cut else round(
+                    float(np.sum(prof.ch_pushes))
+                    / max(pr.dispatches, 1), 3)
+                ch_hw = int(np.max(prof.ch_hw)) if cut else 0
+            rec = dict(
+                name=name, P=P, K=block, us_per_call=round(us, 1),
+                cycles=r.cycles,
+                cycles_per_s=round(r.cycles / (us / 1e6), 1),
+                speedup_vs_p1=round(base_us / us, 3),
+                cut_arcs=len(cut),
+                cut_tokens_per_block=pushes_per_block,
+                channel_high_water=ch_hw,
+                max_region_frac=round(max(w) / max(sum(w), 1), 4),
+                region_weights=[int(x) for x in w],
+                shard_map=bool(mf is not None and mf.use_shard_map),
+                devices=ndev, host_cpus=ncpu)
+            recs.append(rec)
+            print(f"shard_{name}_P{P},{us:.1f},"
+                  f"cycles_per_s={rec['cycles_per_s']};"
+                  f"speedup_vs_p1={rec['speedup_vs_p1']};"
+                  f"cut={rec['cut_arcs']};"
+                  f"max_region_frac={rec['max_region_frac']};"
+                  f"shard_map={int(rec['shard_map'])}")
+    payload = dict(devices=ndev, host_cpus=ncpu, records=recs)
+    path = path or os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_shard.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return recs
+
+
+def quick_shard() -> None:
+    """CI smoke for multi-fabric sharding: in-process sharded-vs-solo
+    bit-identity cross-check (every EngineResult field) on a control-free
+    and a cyclic bench, under the forced 2+ host devices the --shard
+    pre-import guard set up (so the shard_map path, not the vmap
+    fallback, is what CI exercises).  No JSON — the committed
+    BENCH_shard.json is a full-run artifact."""
+    from repro.core import library
+    from repro.core.engine import DataflowEngine
+
+    ndev = len(jax.devices())
+    for name, P, K in (("vector_sum", 2, 4), ("gcd", 2, 8)):
+        bench = library.BENCHES[name]()
+        k = 12 if name in library.SINGLE_SHOT else 4
+        feeds = library.random_feeds(name, bench, k,
+                                     np.random.default_rng(3))
+        solo = DataflowEngine(bench.graph, block_cycles=K).run(feeds)
+        eng = DataflowEngine(bench.graph, block_cycles=K, partition=P)
+        shard = eng.run(feeds)
+        assert shard.outputs == solo.outputs \
+            and shard.counts == solo.counts \
+            and shard.cycles == solo.cycles \
+            and shard.fired == solo.fired, f"shard diverged on {name}"
+        mf = eng._mf_ctx()
+        print(f"shard_check_{name},0,bit_identical=1;P={P};"
+              f"devices={ndev};shard_map={int(mf.use_shard_map)}")
+
+
 def main() -> None:
     from benchmarks import table1_dataflow, kernels_bench, roofline
     table1_dataflow.main()
@@ -217,7 +372,12 @@ if __name__ == "__main__":
     import sys
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))   # `benchmarks` importable from CLI
-    if "--trace" in sys.argv:
+    if "--shard" in sys.argv:
+        if "--quick" in sys.argv:
+            quick_shard()              # CI: shard_map bit-identity smoke
+        else:
+            shard_json()               # the §14 sharding sweep alone
+    elif "--trace" in sys.argv:
         profile_json(quick="--quick" in sys.argv)  # the §12 sweep alone
     elif "--quick" in sys.argv:
         if "--sched" in sys.argv:

@@ -312,7 +312,7 @@ EXECUTORS = ("auto", "dag", "unrolled", *BACKENDS)
 def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
             max_cycles: int = 100_000, backend: str = "auto",
             block_cycles: int = 16, optimize=False,
-            profile: bool = False):
+            profile: bool = False, partition=None):
     """THE compile pipeline: probe traits, pick a legal executor +
     optimize level, return ``run(feeds) -> EngineResult`` (or the
     vmapped stream fn for the "dag" executor).
@@ -359,9 +359,26 @@ def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
     executors have no fabric to count, so asking is an error, not a
     silent no-op.
 
+    partition shards the fabric across regions (DESIGN.md §14):
+      * ``None``   — single fabric (default);
+      * ``int P``  — :func:`repro.core.partition.partition_graph` splits
+        the (post-rewrite) graph into P cost-balanced regions, never
+        cutting a loop cycle;
+      * ``"auto"`` — :func:`repro.core.partition.auto_partition` picks P
+        from the device count and graph size;
+      * a :class:`repro.core.partition.Partition` — used as given
+        (validated).
+    A resolved P>1 partition needs a cycle-accurate engine: with
+    ``backend="auto"`` the probe routes to the ``"xla"`` engine instead
+    of the SSA executors; asking for ``"dag"``/``"unrolled"`` raises.
+    Execution stays bit-identical to the single-fabric engine in every
+    EngineResult field.  P=1 (or an ``"auto"`` resolution of 1) is a
+    pass-through to the ordinary engine.
+
     The returned callable exposes the (possibly rewritten) graph as
     ``.graph``, the rewrite report as ``.report`` (None when no
-    rewrites ran), and the capability probe as ``.traits``.
+    rewrites ran), the capability probe as ``.traits``, and the
+    resolved partition (or None) as ``.partition``.
     """
     if block_cycles < 1:
         raise ValueError(
@@ -379,7 +396,9 @@ def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
             f'optimize={optimize!r} needs an engine backend '
             f'({BACKENDS_NOTE}); backend={backend!r} only supports the '
             'rewrite pipeline (optimize="full"/True)')
-    if profile and backend not in BACKENDS:
+    if profile and backend not in BACKENDS and not (
+            backend == "auto" and partition is not None):
+        # (auto + partition defers: a resolved P>1 routes to the engine)
         raise ValueError(
             f"profile=True needs an engine backend ({BACKENDS_NOTE}); "
             f"backend={backend!r} runs SSA semantics with no fabric "
@@ -390,8 +409,29 @@ def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
         graph, report = passes.optimize_graph(graph, dtype=np.dtype(
             str(jnp.dtype(dtype))))
     traits = GraphTraits.probe(graph)
+    part = None
+    if partition is not None:
+        # resolve against the post-rewrite graph: node indices in the
+        # assignment must name the fabric that actually runs
+        from repro.core.partition import resolve_partition
+        part = resolve_partition(graph, partition)
+    if part is not None and part.P > 1:
+        if backend in ("dag", "unrolled"):
+            raise ValueError(
+                f"{graph.name}: partition={partition!r} needs a "
+                f"cycle-accurate engine backend ({BACKENDS_NOTE}); the "
+                f"{backend!r} SSA executor has no fabric to shard")
+        if backend == "auto":
+            backend = "xla"
     if backend == "auto":
         backend = "dag" if traits.tokens_out_static else "unrolled"
+        if profile and backend not in BACKENDS:
+            # the deferred check above: partition resolved to P=1, so
+            # auto landed on an SSA executor after all
+            raise ValueError(
+                f"profile=True needs an engine backend ({BACKENDS_NOTE});"
+                f" backend={backend!r} runs SSA semantics with no fabric "
+                "cycles to count")
     if backend == "dag" and not traits.tokens_out_static:
         raise ValueError(
             f"{graph.name}: backend='dag' runs lockstep SSA semantics "
@@ -406,7 +446,7 @@ def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
                              optimize=optimize is not False,
                              profile=profile,
                              schedule="auto" if optimize == "sched"
-                             else False)
+                             else False, partition=part)
         run = lambda feeds, max_cycles=None: eng.run(feeds, max_cycles)
         run.engine = eng
     elif backend == "unrolled":
@@ -423,18 +463,19 @@ def compile(graph: Graph, token_shape=(), dtype=jnp.int32,     # noqa: A001
     run.graph = graph
     run.report = report
     run.traits = traits
+    run.partition = part
     return run
 
 
 def compile_graph(graph: Graph, token_shape=(), dtype=jnp.int32,
                   max_cycles: int = 100_000, backend: str = "auto",
                   block_cycles: int = 16, optimize=False,
-                  profile: bool = False):
+                  profile: bool = False, partition=None):
     """Deprecated name for :func:`compile` (kept as a thin wrapper —
     the historical PR 1–4 entry point).  New code should call
     ``compile`` directly."""
     return compile(graph, token_shape, dtype, max_cycles, backend,
-                   block_cycles, optimize, profile)
+                   block_cycles, optimize, profile, partition)
 
 
 def compile_fn(fn, *avals, backend: str = "xla", block_cycles: int = 16,

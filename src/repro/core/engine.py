@@ -26,8 +26,10 @@ fixed priority (input ``a`` wins).  See DESIGN.md §2.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import hashlib
 from typing import Mapping
 
 import jax
@@ -39,8 +41,53 @@ from repro.core.graph import Graph, Op
 _MAX_IN = 3
 _MAX_OUT = 2
 
+# -- _plan memoization ------------------------------------------------------
+# Plan construction walks the whole graph in python and dominates engine
+# construction cost (ROADMAP item 3); the result depends only on the
+# graph's asm signature and the optimize flag (schedule state is built
+# separately and never alters the plan), so one process-wide LRU serves
+# every engine/backend/reference run of the same fabric.  The cached
+# dict's numpy arrays are frozen read-only: sharing is safe because no
+# consumer mutates a plan, and the flag turns any future mutation into
+# an immediate error instead of silent cross-engine corruption.
+_PLAN_CACHE: collections.OrderedDict = collections.OrderedDict()
+_PLAN_CACHE_MAX = 256
+PLAN_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    for k in PLAN_CACHE_STATS:
+        PLAN_CACHE_STATS[k] = 0
+
 
 def _plan(graph: Graph, optimize: bool = False):
+    """Memoized :func:`_plan_build` keyed on (asm signature, optimize).
+
+    The signature is the full textual serialization (nodes, consts,
+    inits), so a mutated Graph re-keys automatically; hits skip both
+    validation and array construction."""
+    from repro.core import asm
+    sig = hashlib.sha256(asm.emit(graph).encode()).hexdigest()
+    key = (sig, bool(optimize))
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None:
+        PLAN_CACHE_STATS["hits"] += 1
+        _PLAN_CACHE.move_to_end(key)
+        return hit
+    PLAN_CACHE_STATS["misses"] += 1
+    p = _plan_build(graph, optimize)
+    for v in p.values():
+        if isinstance(v, np.ndarray):
+            v.flags.writeable = False
+    _PLAN_CACHE[key] = p
+    if len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+        _PLAN_CACHE.popitem(last=False)
+        PLAN_CACHE_STATS["evictions"] += 1
+    return p
+
+
+def _plan_build(graph: Graph, optimize: bool = False):
     """Static (numpy) arrays describing the fabric.
 
     With ``optimize=True`` the plan is *opcode-class specialized*
@@ -334,6 +381,11 @@ class SlotState:
                                 # .SlotSched (per-slot plan refs +
                                 # schedule positions + host-side §12
                                 # counters); None on dynamic engines
+    mf: object = None           # partitioned engines: dict with the
+                                # replicated channel registers (chf/chv,
+                                # [P,B,C]) and channel counters; device
+                                # arrays then carry a leading P regions
+                                # axis (see core/multifabric.py)
 
     @property
     def slots(self) -> int:
@@ -429,7 +481,7 @@ class DataflowEngine:
                  dtype=jnp.int32, max_cycles: int = 100_000,
                  backend: str = "xla", block_cycles: int = 1,
                  optimize: bool = False, profile: bool = False,
-                 schedule: bool | str = False):
+                 schedule: bool | str = False, partition=None):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
         if block_cycles < 1:
@@ -475,10 +527,43 @@ class DataflowEngine:
                     f"fabric, but this one has: {', '.join(blockers)} "
                     "(use schedule='auto' to fall back dynamically)")
             self._sched_on = not blockers
+        # partition: None/1 = solo fabric; int P / "auto" / Partition =
+        # shard the graph into P regions (DESIGN.md §14) and run them as
+        # communicating fabrics under shard_map (or a vmap'd shards axis
+        # on a single device).  Every run/slot entry point delegates to
+        # core/multifabric.py when engaged; results stay bit-identical
+        # to the solo fabric in every field.
+        self.partition = None
+        self._mf = None
+        if partition is not None:
+            from repro.core.partition import resolve_partition
+            self.partition = resolve_partition(graph, partition)
+        self._part_on = (self.partition is not None
+                         and self.partition.P > 1)
+        if self._part_on:
+            if backend == "reference":
+                raise ValueError(
+                    "partitioned execution needs a device backend "
+                    "(xla or pallas), not 'reference' — the reference "
+                    "oracle IS the solo fabric the shards are checked "
+                    "against")
+            if self.token_shape != ():
+                raise ValueError(
+                    "partitioned execution supports scalar tokens only")
+            if schedule is True:
+                raise ValueError(
+                    "schedule=True cannot compose with partition > 1 "
+                    "(regions run the dynamic cycle body; use "
+                    "schedule='auto' to let partition win)")
+            # regions execute the fused SPMD cycle body; the static
+            # firing schedule is a whole-fabric single-device program
+            self._sched_on = False
         self.p = _plan(graph, optimize=self.optimize)
         self._slot_steps: dict[int, object] = {}
         self._tables = None
-        if backend == "pallas":
+        if self._part_on:
+            pass    # multifabric builds its own per-region tables lazily
+        elif backend == "pallas":
             if self.token_shape != () or self.dtype != jnp.int32:
                 raise ValueError(
                     "pallas backend supports scalar int32 tokens only")
@@ -488,6 +573,16 @@ class DataflowEngine:
             self._run = jax.jit(self._run_impl,
                                 static_argnames=("max_cycles",))
             self._vruns: dict[int, object] = {}
+
+    def _mf_ctx(self):
+        """Lazy per-engine multi-fabric runtime (DESIGN.md §14)."""
+        if self._mf is None:
+            from repro.core.multifabric import MultiFabric
+            self._mf = MultiFabric(
+                self.graph, self.partition, dtype=self.dtype,
+                block_cycles=self.block_cycles, optimize=self.optimize,
+                profile=self.profile, max_cycles=self.max_cycles)
+        return self._mf
 
     def _block_tables(self):
         """Gather-layout node/arc/environment tables (built lazily for
@@ -511,6 +606,8 @@ class DataflowEngine:
             max_cycles: int | None = None) -> EngineResult:
         """feeds: arc -> [k, *token_shape] stream of tokens (k may vary)."""
         max_cycles = max_cycles or self.max_cycles
+        if self._part_on:
+            return self._mf_ctx().run(feeds, max_cycles)
         if self._sched_on:
             from repro.core import schedule as _sched
             try:
@@ -550,6 +647,8 @@ class DataflowEngine:
             raise ValueError(
                 "run_batch: feeds_batch is empty — pass at least one "
                 "feed dict (use run() for a single stream)")
+        if self._part_on:
+            return self._mf_ctx().run_batch(feeds_batch, max_cycles)
         if self._sched_on:
             from repro.core import schedule as _sched
             try:
@@ -650,6 +749,8 @@ class DataflowEngine:
         self._check_slot_api()
         if slots < 1:
             raise ValueError("slots must be >= 1")
+        if self._part_on:
+            return self._mf_ctx().slot_init(int(slots))
         p = self.p
         B = int(slots)
         n_in = max(len(p["input_arcs"]), 1)
@@ -717,6 +818,9 @@ class DataflowEngine:
         sharing its buffers) must not be used again on backends that
         honor donation — always continue from the returned state."""
         self._check_slot_api()
+        if self._part_on:
+            return self._mf_ctx().slot_reset(state, slot_ids, new_feeds,
+                                             caps)
         slot_ids = list(slot_ids)
         new_feeds = list(new_feeds)
         if len(slot_ids) != len(new_feeds):
@@ -807,6 +911,8 @@ class DataflowEngine:
             raise ValueError("n_cycles must be >= 1")
         if not state.active.any():
             return state
+        if self._part_on:
+            return self._mf_ctx().slot_step(state, nb)
         if self._sched_on:
             from repro.core import schedule as _sched
             return _sched.step_block_sched(self, state, nb)
@@ -857,6 +963,8 @@ class DataflowEngine:
         idle cycle, capped at the slot's cycle cap (per-request if the
         admission set one); dispatches = blocks the request rode."""
         self._check_slot_api()
+        if self._part_on:
+            return self._mf_ctx().slot_harvest(state, slot_ids)
         slot_ids = list(slot_ids)
         idle = [b for b in slot_ids if not state.active[b]]
         if idle:

@@ -84,7 +84,9 @@ from typing import Iterable, Mapping
 import numpy as np
 
 from repro.core import asm
-from repro.core.engine import (BACKENDS, DataflowEngine, run_reference)
+from repro.core.engine import (BACKENDS, PLAN_CACHE_STATS, DataflowEngine,
+                               run_reference)
+from repro.core.partition import resolve_partition
 from repro.core.graph import Graph
 from repro.serve.admission import (POLICIES, DroppedError, FairQueue,
                                    QueueFullError, Rejected)
@@ -101,7 +103,10 @@ _ENGINE_CACHE: "collections.OrderedDict[tuple, DataflowEngine]" = \
 _ENGINE_CACHE_MAX = 64      # LRU bound: a long-running service sees a
                             # finite fabric vocabulary; evicted engines
                             # stay alive wherever still referenced
-CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0,
+               # live view of the process-wide _plan memo (engine-level;
+               # ROADMAP item 3): same dict object, not a snapshot
+               "plan": PLAN_CACHE_STATS}
 
 
 def graph_signature(graph: Graph) -> str:
@@ -117,29 +122,38 @@ def cached_engine(graph: Graph, *, backend: str = "xla",
                   token_shape: tuple = (), dtype=np.int32,
                   optimize: bool = False,
                   profile: bool = False,
-                  schedule: bool | str = False) -> DataflowEngine:
+                  schedule: bool | str = False,
+                  partition=None) -> DataflowEngine:
     """Engine for (graph signature, backend, K, token_shape, dtype,
-    optimize, profile, schedule) — compiled once, shared by every
-    server/request that presents the same fabric (the cache key hashes
-    the signature, not the graph object, so structurally equal graphs
-    share).
+    optimize, profile, schedule, partition) — compiled once, shared by
+    every server/request that presents the same fabric (the cache key
+    hashes the signature, not the graph object, so structurally equal
+    graphs share).
 
-    token_shape/dtype/optimize/profile/schedule are part of the key:
-    two servers over the same fabric signature with different token
-    shapes or opt flags compile to different plans and must not collide
-    on one engine (a profiled engine threads §12 counter state through
-    every step, so it cannot share dispatch plans with an unprofiled
-    one; a scheduled engine replaces the block stepper entirely, so it
-    cannot alias the dynamic engine for the same signature)."""
+    token_shape/dtype/optimize/profile/schedule/partition are part of
+    the key: two servers over the same fabric signature with different
+    token shapes or opt flags compile to different plans and must not
+    collide on one engine (a profiled engine threads §12 counter state
+    through every step, so it cannot share dispatch plans with an
+    unprofiled one; a scheduled engine replaces the block stepper
+    entirely, so it cannot alias the dynamic engine for the same
+    signature; a partitioned engine runs the §14 multi-fabric stepper
+    whose state carries channel registers, so a sharded and an unsharded
+    compile — or two different region assignments — must never alias).
+    The partition key component is ``Partition.spec()``: region count +
+    assignment hash."""
     if backend not in BACKENDS:
         raise ValueError(f"backend {backend!r} not in {BACKENDS}")
     token_shape = tuple(int(d) for d in token_shape)
     dtype = np.dtype(str(dtype)) if isinstance(dtype, str) \
         else np.dtype(dtype)
+    part = resolve_partition(graph, partition)
+    if part is not None and part.P <= 1:
+        part = None            # degenerate: same engine as unsharded
     key = (hashlib.sha256(graph_signature(graph).encode()).hexdigest(),
            backend, int(block_cycles), int(max_cycles),
            token_shape, dtype.str, bool(optimize), bool(profile),
-           str(schedule))
+           str(schedule), "none" if part is None else part.spec())
     eng = _ENGINE_CACHE.get(key)
     if eng is None:
         CACHE_STATS["misses"] += 1
@@ -149,7 +163,8 @@ def cached_engine(graph: Graph, *, backend: str = "xla",
                              max_cycles=max_cycles,
                              optimize=optimize,
                              profile=profile,
-                             schedule=schedule)
+                             schedule=schedule,
+                             partition=part)
         _ENGINE_CACHE[key] = eng
         while len(_ENGINE_CACHE) > _ENGINE_CACHE_MAX:
             _ENGINE_CACHE.popitem(last=False)
@@ -210,7 +225,8 @@ class DataflowServer:
                  max_retries: int = 3, retry_backoff_s: float = 0.0,
                  faults=None, profile: bool = False,
                  trace=None, metrics=None,
-                 schedule: bool | str = False):
+                 schedule: bool | str = False,
+                 partition=None):
         if slots < 1:
             raise ValueError("slots must be >= 1")
         if policy not in POLICIES:
@@ -250,6 +266,10 @@ class DataflowServer:
         # rides the cache key so scheduled and dynamic engines for the
         # same fabric signature never alias
         self._schedule = schedule
+        # partition=P|"auto"|Partition serves the fabric sharded across
+        # regions (DESIGN.md §14) — results stay bit-identical, so the
+        # reference fallback simply ignores it
+        self._partition = partition
         self._input_arcs = tuple(graph.input_arcs())
         self.queue = FairQueue()
         self.block = 0            # server block clock (dispatches issued)
@@ -301,7 +321,8 @@ class DataflowServer:
                     self.engine = cached_engine(
                         graph, backend=be, block_cycles=block_cycles,
                         max_cycles=max_cycles, optimize=optimize,
-                        profile=self.profile, schedule=schedule)
+                        profile=self.profile, schedule=schedule,
+                        partition=partition)
                     break
                 except Exception as e:
                     self._log_event("compile-degrade", backend=be,
